@@ -1,0 +1,84 @@
+"""Shared helpers for the per-table benchmarks.
+
+Output contract (benchmarks/run.py): every table prints CSV rows
+``name,us_per_call,derived`` where us_per_call measures the benchmark's
+representative jit'd call on this host and `derived` carries the
+table-specific metric (loss delta, simulated latency, speedup, ...).
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import tiny_config
+from repro.configs.base import OptimConfig, TrainConfig
+from repro.core import quantization as q
+from repro.data.pipeline import DataConfig, batch_at
+from repro.models.api import build_model
+from repro.training import steps as steps_lib
+
+F32 = jnp.float32
+
+
+def time_call(fn, *args, iters: int = 3) -> float:
+    fn(*args)  # compile
+    t0 = time.time()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / iters * 1e6  # us
+
+
+def row(name: str, us: float, derived: str):
+    print(f"{name},{us:.4g},{derived}", flush=True)
+
+
+def trained_tiny_model(arch: str = "granite-3-8b", steps: int = 120,
+                       B: int = 8, S: int = 64, seed: int = 0):
+    """A briefly-trained tiny model + eval batch (shared AMC/HAQ subject).
+    Family-aware batches (vlm patches / encdec frames) via the pipeline."""
+    from repro.configs.base import ShapeConfig
+    from repro.data.pipeline import batch_for_model
+
+    cfg = tiny_config(arch)
+    model = build_model(cfg)
+    tcfg = TrainConfig(optim=OptimConfig(lr=5e-3, warmup_steps=4,
+                                         total_steps=steps))
+    state = steps_lib.init_train_state(model, tcfg, jax.random.PRNGKey(seed))
+    step = jax.jit(steps_lib.make_train_step(model, tcfg))
+    shape = ShapeConfig("bench", S, B, "train")
+    dcfg = DataConfig(cfg.vocab_size, S, B, seed=seed)
+    for s in range(steps):
+        state, m = step(state, batch_for_model(model, shape, dcfg, s))
+    val = batch_for_model(model, shape, dcfg, 10_000)
+    return model, state["params"], val
+
+
+def make_traced_policy_loss(model, params, batch, site_names):
+    """One jit'd loss(policy_arrays) — bits are traced, so the HAQ episode
+    loop never recompiles."""
+    def loss_fn(policy):
+        def dot(x, w, name):
+            eq = q._einsum_for(x, w)
+            if name not in policy:
+                return jnp.einsum(eq, x, w)
+            w_bits, a_bits = policy[name]
+            wq = q.fake_quant_weight(w, w_bits)
+            xq = q.fake_quant_act(x, a_bits)
+            # bits >= 16 -> no-op (traced select)
+            wq = jnp.where(w_bits >= 16, w.astype(wq.dtype), wq)
+            xq = jnp.where(a_bits >= 16, x.astype(xq.dtype), xq)
+            return jnp.einsum(eq, xq, wq)
+        return model.loss(params, batch, dot=dot)
+
+    jitted = jax.jit(loss_fn)
+
+    def eval_policy(policy: Dict[str, Tuple[int, int]]) -> float:
+        arr = {k: (jnp.asarray(v[0], F32), jnp.asarray(v[1], F32))
+               for k, v in policy.items() if k in site_names}
+        return float(jitted(arr))
+
+    return eval_policy

@@ -1,0 +1,46 @@
+"""§Roofline report + Fig. 4 analogue — reads artifacts/dryrun/*.json (the
+compiled dry-run measurements) and prints (a) the full per-cell roofline
+table, (b) the HAQ before/after roofline move for decode layer classes."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from benchmarks.common import row
+from repro.configs import get_config
+from repro.core import haq
+from repro.core.hardware_model import V5E_EDGE, V5E_POD
+
+ART = Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
+
+
+def main():
+    recs = sorted(ART.glob("*__single.json"))
+    for p in recs:
+        r = json.loads(p.read_text())
+        rf = r["roofline"]
+        name = f"roofline/{r['arch']}__{r['shape']}"
+        derived = (f"bottleneck={rf['bottleneck']};"
+                   f"t_comp={rf['t_compute_s']:.4f}s;"
+                   f"t_mem={rf['t_memory_s']:.4f}s;"
+                   f"t_coll={rf['t_collective_s']:.4f}s;"
+                   f"useful={rf['useful_flops_ratio']:.3f};"
+                   f"mfu_bound={rf['mfu_bound']:.3f}")
+        row(name, rf["t_compute_s"] * 1e6, derived)
+
+    # Fig. 4: operation intensity before (bf16) and after HAQ (mixed bits)
+    cfg = get_config("granite-3-8b")
+    sites = haq.enumerate_sites(cfg, batch=1, seq=4096, decode=True)
+    for s in sites[:6]:
+        i16 = float(s.cost.intensity(16, 16))
+        i4 = float(s.cost.intensity(4, 8))
+        t16 = s.latency(V5E_EDGE, 16, 16) * 1e6
+        t4 = s.latency(V5E_EDGE, 4, 8) * 1e6
+        row(f"fig4/{s.name}", t16,
+            f"intensity_bf16={i16:.1f};intensity_haq={i4:.1f};"
+            f"lat_bf16_us={t16:.2f};lat_haq_us={t4:.2f};"
+            f"gain={t16 / max(t4, 1e-12):.2f}x")
+
+
+if __name__ == "__main__":
+    main()

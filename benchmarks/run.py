@@ -1,0 +1,45 @@
+"""Benchmark driver: one section per paper table. Prints
+``name,us_per_call,derived`` CSV (see benchmarks/common.py).
+
+Run: PYTHONPATH=src python -m benchmarks.run [table1 table3 ...]
+"""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+SECTIONS = [
+    ("table1", "benchmarks.table1_specialization"),
+    ("table2", "benchmarks.table2_cross_hw"),
+    ("table3", "benchmarks.table3_amc_speedup"),
+    ("table4", "benchmarks.table4_amc_vs_uniform"),
+    ("table5", "benchmarks.table5_cross_hw_quant"),
+    ("table6", "benchmarks.table6_haq_latency"),
+    ("table7", "benchmarks.table7_transfer"),
+    ("roofline", "benchmarks.roofline_report"),
+]
+
+
+def main() -> None:
+    want = set(sys.argv[1:])
+    print("name,us_per_call,derived")
+    failures = []
+    for tag, mod_name in SECTIONS:
+        if want and tag not in want:
+            continue
+        t0 = time.time()
+        try:
+            mod = __import__(mod_name, fromlist=["main"])
+            mod.main()
+            print(f"# {tag} done in {time.time() - t0:.1f}s", flush=True)
+        except Exception as e:  # noqa: BLE001
+            failures.append((tag, repr(e)))
+            traceback.print_exc()
+            print(f"# {tag} FAILED: {e!r}", flush=True)
+    if failures:
+        raise SystemExit(f"{len(failures)} benchmark sections failed")
+
+
+if __name__ == "__main__":
+    main()

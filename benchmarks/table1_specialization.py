@@ -1,0 +1,85 @@
+"""Table 1 / Fig. 2 — specialized model vs fixed baselines on the target
+hardware (simulated TPU latency; quality = val CE on the synthetic task).
+
+Baselines mirror the paper's: a uniform full-attention stack (the
+"human-designed" reference), a uniform local stack ("small model"), and the
+NAS-specialized architecture at a latency budget between the two.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import row, time_call
+from repro.configs.supernet_lm import BACKBONE, CANDIDATE_OPS
+from repro.core import latency_table as lt
+from repro.core import nas
+from repro.core import supernet as sn
+from repro.core.hardware_model import V5E_POD
+
+
+def tiny_backbone():
+    cfg = BACKBONE.replace(num_layers=6, d_model=96, num_heads=4,
+                           num_kv_heads=2, head_dim=24, d_ff=192,
+                           vocab_size=512)
+    return cfg.replace(ssm=cfg.ssm.__class__(
+        d_state=16, expand=2, head_dim=48, n_groups=1, chunk=32))
+
+
+def arch_latency(arch, lut):
+    import numpy as np
+    one_hot = jnp.asarray(np.eye(len(CANDIDATE_OPS))[
+        [CANDIDATE_OPS.index(op) for op in arch]])
+    return float(lt.sampled_latency(one_hot, lut)) * 1e6
+
+
+def eval_arch(arch, cfg, data, steps=60):
+    """Train a fixed (one-hot) architecture briefly, return val CE."""
+    params, alpha = sn.init_supernet(jax.random.PRNGKey(1), cfg)
+    gates = jnp.asarray([CANDIDATE_OPS.index(op) for op in arch])
+
+    @jax.jit
+    def step(params, batch):
+        loss, g = jax.value_and_grad(sn.supernet_loss)(params, alpha, gates,
+                                                       batch, cfg)
+        gn = jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                          for x in jax.tree.leaves(g)))
+        sc = jnp.minimum(1.0, 1.0 / (gn + 1e-9))
+        return jax.tree.map(lambda p, x: p - (3e-2 * sc * x).astype(p.dtype),
+                            params, g), loss
+
+    for s in range(steps):
+        params, _ = step(params, data(s))
+    return float(sn.supernet_loss(params, alpha, gates, data(9999), cfg))
+
+
+def main():
+    cfg = tiny_backbone()
+    data = nas.synthetic_lm_data(cfg, batch=4, seq=64)
+    lut = lt.build_lut(cfg, 4, 64, V5E_POD)
+
+    baselines = {
+        "uniform-full-e4": ["attn_full_e4"] * cfg.num_layers,
+        "uniform-full-e2": ["attn_full_e2"] * cfg.num_layers,
+        "uniform-local1k-e2": ["attn_local1k_e2"] * cfg.num_layers,
+    }
+    # budget: between the cheap and expensive uniform baselines
+    ref = 0.75 * arch_latency(baselines["uniform-full-e4"], lut) / 1e6
+    res = nas.search(data, hw=V5E_POD,
+                     ncfg=nas.NASConfig(steps=80, warmup_steps=30, batch=4,
+                                        seq=64, alpha_lr=0.08, lat_ref=ref,
+                                        log_every=40),
+                     cfg=cfg, lut=lut)
+    candidates = dict(baselines, **{"nas-specialized": res["arch"]})
+
+    for name, arch in candidates.items():
+        ce = eval_arch(arch, cfg, data)
+        lat = arch_latency(arch, lut)
+        us = time_call(jax.jit(lambda t: t + 1), jnp.zeros(()))
+        row(f"table1/{name}", lat, f"val_ce={ce:.3f}")
+    row("table1/nas-arch", res["e_lat_us"],
+        "arch=" + "|".join(res["arch"]))
+
+
+if __name__ == "__main__":
+    main()

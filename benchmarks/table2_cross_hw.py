@@ -1,0 +1,62 @@
+"""Table 2 — hardware prefers specialized models: search one architecture per
+hardware target, then evaluate every architecture's simulated latency on
+every target (diagonal should win, as in the paper's GPU/CPU/mobile matrix).
+
+Targets (TPU serving regimes, DESIGN.md §2):
+  decode-edge   — 1 chip,   batch 1 decode      (memory-bound)
+  prefill-pod   — 256 chips, batch 8 x 2048     (compute-bound)
+  train-2pod    — 512 chips, slower cross-pod ICI (collective-sensitive)
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row
+from benchmarks.table1_specialization import tiny_backbone, arch_latency
+from repro.core import latency_table as lt
+from repro.core import nas
+from repro.core.hardware_model import V5E_2POD, V5E_EDGE, V5E_POD
+
+TARGETS = {
+    "decode-edge": (V5E_EDGE, dict(batch=1, seq=2048, decode=True)),
+    "prefill-pod": (V5E_POD, dict(batch=8, seq=2048, decode=False)),
+    "train-2pod": (V5E_2POD, dict(batch=8, seq=2048, decode=False)),
+}
+
+
+def main():
+    cfg = tiny_backbone()
+    data = nas.synthetic_lm_data(cfg, batch=4, seq=64)
+    luts = {name: lt.build_lut(cfg, hw=hw, **kw)
+            for name, (hw, kw) in TARGETS.items()}
+
+    archs = {}
+    for name, lut in luts.items():
+        ref = 0.6 * float(lt.expected_latency(
+            jnp.zeros((cfg.num_layers, lut.shape[1])), lut))
+        res = nas.search(data, hw=TARGETS[name][0],
+                         ncfg=nas.NASConfig(steps=60, warmup_steps=20,
+                                            batch=4, seq=64, alpha_lr=0.08,
+                                            lat_ref=ref, log_every=60),
+                         cfg=cfg, lut=lut)
+        archs[name] = res["arch"]
+
+    # cross matrix, normalized per column: cell = slowdown vs the best arch
+    # on that target (regimes have different absolute scales; the paper's
+    # Table 2 point is the DIAGONAL wins its column)
+    lats = {a: {t: arch_latency(arch, luts[t]) for t in TARGETS}
+            for a, arch in archs.items()}
+    col_best = {t: min(lats[a][t] for a in archs) for t in TARGETS}
+    for a_name in archs:
+        rel = {t: lats[a_name][t] / max(col_best[t], 1e-12) for t in TARGETS}
+        derived = ";".join(f"{t}={rel[t]:.3f}x" for t in TARGETS)
+        diag_wins = rel[a_name] <= min(rel.values()) + 1e-9
+        row(f"table2/specialized-for-{a_name}",
+            lats[a_name][a_name] * 1e3,  # ns
+            derived + f";diagonal_best={diag_wins};"
+            f"arch={'|'.join(archs[a_name][:6])}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Table 3 — AMC speeds up the model: prune a trained tiny LM to 50% FLOPs
+(and a 50%-latency variant), report simulated TPU latency, memory, and
+quality before/after (the paper's MobileNet 1.81x/1.95x rows)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import row, time_call, trained_tiny_model
+from repro.core import amc
+from repro.core.hardware_model import V5E_EDGE, linear_cost
+
+
+def model_latency_bytes(model, ratios, layers):
+    """Simulated per-token decode latency + weight bytes at given keep
+    ratios (attention heads scale qkv/o; ffn units scale both matmuls)."""
+    cfg = model.cfg
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    lat, mem = 0.0, 0.0
+    for layer, r in zip(layers, ratios):
+        if layer.kind == "attn":
+            c = linear_cost(1, d, int((cfg.num_heads + 2 * cfg.num_kv_heads)
+                                      * hd * r))
+            c2 = linear_cost(1, int(cfg.num_heads * hd * r), d)
+        else:
+            c = linear_cost(1, d, int(cfg.d_ff * r) * 3)
+            c2 = linear_cost(1, int(cfg.d_ff * r), d)
+        n = cfg.num_layers
+        lat += float(c.latency(V5E_EDGE) + c2.latency(V5E_EDGE)) * n
+        mem += float(c.weight_bytes + c2.weight_bytes) * n
+    return lat * 1e6, mem / 2**20
+
+
+def main():
+    model, params, val = trained_tiny_model()
+    eval_loss = jax.jit(lambda p: model.loss(p, val))
+    base_loss = float(eval_loss(params))
+    layers = amc.enumerate_layers(model, tokens=4096)
+
+    lat0, mem0 = model_latency_bytes(model, [1.0] * len(layers), layers)
+    us0 = time_call(eval_loss, params)
+    row("table3/dense-100pct", us0,
+        f"loss={base_loss:.3f};sim_lat_us={lat0:.2f};weights_MiB={mem0:.2f}")
+
+    for target, tag in [(0.5, "amc-50pct-flops"), (0.4, "amc-50pct-latency")]:
+        res = amc.search(model, params, eval_loss,
+                         amc.AMCConfig(target=target, episodes=24))
+        ratios = res["best"]["ratios"]
+        masked = amc.apply_ratios(params, layers, ratios)
+        us = time_call(eval_loss, masked)
+        lat, mem = model_latency_bytes(model, ratios, layers)
+        row(f"table3/{tag}", us,
+            f"loss={res['best']['loss']:.3f};sim_lat_us={lat:.2f};"
+            f"weights_MiB={mem:.2f};speedup={lat0 / lat:.2f}x;"
+            f"flops={res['best']['flops_frac']:.2f}")
+
+
+if __name__ == "__main__":
+    main()

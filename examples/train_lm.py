@@ -1,0 +1,63 @@
+"""End-to-end driver (assignment deliverable (b)): train a ~100M-param LM for
+a few hundred steps on the deterministic synthetic pipeline, with
+checkpoint/restart and straggler monitoring — the full production loop at
+CPU scale.
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 200]
+
+~100M config: 12L x d512 (GQA 8/4) x ff2048, vocab 32k -> 103M params.
+"""
+import argparse
+import sys
+import time
+
+import jax
+
+sys.path.insert(0, "src")
+
+from repro.configs.base import (ModelConfig, OptimConfig, ShapeConfig,
+                                TrainConfig)
+from repro.models.api import build_model
+from repro.training.loop import train
+
+CFG_100M = ModelConfig(
+    name="repro-lm-100m",
+    family="dense",
+    num_layers=12,
+    d_model=512,
+    num_heads=8,
+    num_kv_heads=4,
+    d_ff=2048,
+    vocab_size=32000,
+    activation="swiglu",
+)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_100m")
+    args = ap.parse_args()
+
+    model = build_model(CFG_100M)
+    print(f"{CFG_100M.name}: {model.param_count():,} params on "
+          f"{jax.device_count()} device(s)")
+    shape = ShapeConfig("train", args.seq, args.batch, "train")
+    tcfg = TrainConfig(
+        optim=OptimConfig(lr=1e-3, warmup_steps=20, total_steps=args.steps),
+        checkpoint_dir=args.ckpt_dir, checkpoint_every=50, log_every=10)
+    t0 = time.time()
+    out = train(model, shape, tcfg, num_steps=args.steps)
+    dt = time.time() - t0
+    h = out["history"]
+    toks = args.steps * args.batch * args.seq
+    print(f"loss {h[0]['loss']} -> {h[-1]['loss']} in {dt:.0f}s "
+          f"({toks / dt:.0f} tok/s); straggler events: "
+          f"{len(out['straggler_events'])}")
+    assert h[-1]["loss"] < h[0]["loss"], "training must reduce loss"
+
+
+if __name__ == "__main__":
+    main()

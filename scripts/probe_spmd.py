@@ -1,0 +1,39 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import time
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import make_production_mesh
+
+mesh = make_production_mesh(multi_pod=False)
+print("mesh", mesh.shape, "devices", jax.device_count())
+
+W = jax.ShapeDtypeStruct((4096, 8192), jnp.bfloat16)
+X = jax.ShapeDtypeStruct((256, 4096), jnp.bfloat16)
+
+
+def step(w, x):
+    y = jnp.einsum("bd,df->bf", x, w, preferred_element_type=jnp.float32)
+    return jnp.sum(jax.nn.relu(y))
+
+
+t0 = time.time()
+lowered = jax.jit(step, in_shardings=(
+    NamedSharding(mesh, P("data", "model")),
+    NamedSharding(mesh, P("data", None)),
+)).lower(W, X)
+compiled = lowered.compile()
+print("compile_s", round(time.time() - t0, 2))
+ma = compiled.memory_analysis()
+print("memory_analysis:", ma)
+ca = compiled.cost_analysis()
+ca = ca[0] if isinstance(ca, list) else ca
+print("flops", ca.get("flops"), "bytes", ca.get("bytes accessed"))
+text = compiled.as_text()
+print("hlo chars", len(text))
+for ln in text.splitlines():
+    if "all-" in ln or "reduce-scatter" in ln or "collective" in ln:
+        print("COLL:", ln.strip()[:160])

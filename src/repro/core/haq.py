@@ -1,0 +1,230 @@
+"""HAQ — Hardware-Aware Automated Quantization (paper §4), TPU-adapted.
+
+DDPG agent assigns per-site (w_bits, a_bits); the TPU roofline simulator
+(core/hardware_model.py) provides DIRECT latency/energy feedback — never
+FLOPs proxies. Budget enforcement is the paper's exact mechanism: "if the
+current policy exceeds our resource budget, we sequentially decrease the
+bitwidth of each layer until the constraint is finally satisfied".
+
+Weight bits ∈ {2..8}, activation bits ∈ {4..8,16}; on TPU the compute
+speedup step-functions at 8 bits (int8 MXU) while HBM traffic scales
+linearly with bits — which is why the learned TPU policies differ from the
+paper's BitFusion/BISMO policies (DESIGN.md §2): decode (memory-bound)
+drives weights to 2-4 bits, prefill (compute-bound) parks them at 8.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core import quantization as q
+from repro.core.hardware_model import Hardware, V5E_EDGE, OpCost, linear_cost
+from repro.core.rl.ddpg import DDPG, DDPGConfig
+
+STATE_DIM = 10
+W_BITS = (2, 3, 4, 5, 6, 7, 8)
+A_BITS = (4, 5, 6, 7, 8, 16)
+
+
+@dataclasses.dataclass
+class HAQConfig:
+    latency_budget: float = 0.0     # seconds; 0 -> derived as frac of 8-bit
+    budget_frac: float = 0.7        # budget = frac * latency(W8A8)
+    episodes: int = 60
+    quality_coef: float = 1.0       # reward = -coef * ΔCE
+    seed: int = 0
+    mode: str = "latency"           # latency | energy | size
+
+
+class QuantSite:
+    """One quantizable matmul site (layer-kind granularity, both stacks)."""
+
+    def __init__(self, name: str, tokens: int, d_in: int, d_out: int,
+                 count: int):
+        self.name = name
+        self.tokens = tokens
+        self.d_in = d_in
+        self.d_out = d_out
+        self.count = count          # layers sharing this site
+        self.cost: OpCost = linear_cost(tokens, d_in, d_out)
+
+    def latency(self, hw, w_bits, a_bits) -> float:
+        return float(self.cost.latency(hw, w_bits, a_bits)) * self.count
+
+    def energy(self, hw, w_bits, a_bits) -> float:
+        return float(self.cost.energy(hw, w_bits, a_bits)) * self.count
+
+    def size_bytes(self, w_bits) -> float:
+        return float(self.cost.weight_bytes) * w_bits / 16.0 * self.count
+
+
+def enumerate_sites(cfg, batch: int, seq: int, *, decode=False
+                    ) -> List[QuantSite]:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    H, K = cfg.num_heads, cfg.num_kv_heads
+    L = cfg.num_layers
+    tokens = batch * (1 if decode else seq)
+    sites = [
+        QuantSite("attn_q", tokens, d, H * hd, L),
+        QuantSite("attn_k", tokens, d, K * hd, L),
+        QuantSite("attn_v", tokens, d, K * hd, L),
+        QuantSite("attn_o", tokens, H * hd, d, L),
+    ]
+    gated = cfg.activation in ("swiglu", "geglu")
+    if cfg.moe:
+        n_moe = sum(1 for i in range(cfg.num_layers) if cfg.is_moe_layer(i))
+        ff = cfg.moe.d_ff_expert
+        k = cfg.moe.experts_per_token
+        sites += [
+            QuantSite("moe_in", tokens * k, d, ff, n_moe),
+            QuantSite("moe_gate", tokens * k, d, ff, n_moe),
+            QuantSite("moe_out", tokens * k, ff, d, n_moe),
+        ]
+        n_dense = L - n_moe
+    else:
+        n_dense = L
+    if cfg.d_ff and n_dense:
+        sites += [QuantSite("ffn_in", tokens, d, cfg.d_ff, n_dense),
+                  QuantSite("ffn_out", tokens, cfg.d_ff, d, n_dense)]
+        if gated:
+            sites.append(QuantSite("ffn_gate", tokens, d, cfg.d_ff, n_dense))
+    if cfg.ssm:
+        di = cfg.d_inner
+        s = cfg.ssm
+        proj = 2 * di + 2 * s.n_groups * s.d_state + cfg.ssm_heads
+        sites += [QuantSite("ssm_in", tokens, d, proj, L),
+                  QuantSite("ssm_out", tokens, di, d, L)]
+    return sites
+
+
+def resource(sites, wa: List[Tuple[int, int]], hw: Hardware,
+             mode: str) -> float:
+    if mode == "latency":
+        return sum(s.latency(hw, w, a) for s, (w, a) in zip(sites, wa))
+    if mode == "energy":
+        return sum(s.energy(hw, w, a) for s, (w, a) in zip(sites, wa))
+    return sum(s.size_bytes(w) for s, (w, _) in zip(sites, wa))
+
+
+def enforce_budget(sites, wa: List[Tuple[int, int]], hw: Hardware,
+                   budget: float, mode: str) -> List[Tuple[int, int]]:
+    """Paper's back-off: sequentially decrement bitwidths until it fits."""
+    wa = list(wa)
+    guard = 0
+    while resource(sites, wa, hw, mode) > budget and guard < 10_000:
+        # decrement the site with the largest resource contribution that can
+        # still go lower (sequential sweep, as in the paper)
+        changed = False
+        for i in range(len(wa)):
+            w, a = wa[i]
+            if a > min(A_BITS):
+                wa[i] = (w, A_BITS[A_BITS.index(a) - 1])
+                changed = True
+            elif w > min(W_BITS):
+                wa[i] = (w - 1, a)
+                changed = True
+            if changed and resource(sites, wa, hw, mode) <= budget:
+                return wa
+        if not changed:
+            break
+        guard += 1
+    return wa
+
+
+class HAQEnv:
+    def __init__(self, cfg, sites: List[QuantSite],
+                 eval_policy: Callable[[Dict[str, Tuple[int, int]]], float],
+                 hcfg: HAQConfig, hw: Hardware = V5E_EDGE):
+        self.cfg = cfg
+        self.sites = sites
+        self.eval_policy = eval_policy
+        self.hcfg = hcfg
+        self.hw = hw
+        base = [(8, 8)] * len(sites)
+        self.base_resource = resource(sites, base, hw, hcfg.mode)
+        self.budget = hcfg.latency_budget or hcfg.budget_frac * \
+            self.base_resource
+        self.base_loss = float(eval_policy({s.name: (16, 16)
+                                            for s in sites}))
+
+    def state(self, t: int, prev_w: int, prev_a: int) -> np.ndarray:
+        s = self.sites[t]
+        return np.array([
+            t / max(len(self.sites) - 1, 1),
+            np.log10(max(float(s.cost.flops), 1.0)) / 15.0,
+            np.log10(max(float(s.cost.weight_bytes), 1.0)) / 12.0,
+            float(s.cost.intensity()) / 1000.0,
+            s.d_in / 16384.0,
+            s.d_out / 16384.0,
+            s.count / 100.0,
+            prev_w / 8.0,
+            prev_a / 16.0,
+            self.budget / max(self.base_resource, 1e-12),
+        ], np.float32)
+
+    def decode_action(self, a: float, arr) -> int:
+        idx = int(round(a * (len(arr) - 1)))
+        return arr[max(0, min(idx, len(arr) - 1))]
+
+    def rollout(self, agent_w: DDPG, agent_a: DDPG, explore=True) -> dict:
+        wa: List[Tuple[int, int]] = []
+        traj = []
+        pw, pa = 8, 8
+        for t in range(len(self.sites)):
+            s = self.state(t, pw, pa)
+            aw = agent_w.act(s, explore=explore)
+            aa = agent_a.act(s, explore=explore)
+            w_bits = self.decode_action(aw, W_BITS)
+            a_bits = self.decode_action(aa, A_BITS)
+            wa.append((w_bits, a_bits))
+            traj.append((s, aw, aa))
+            pw, pa = w_bits, a_bits
+        wa = enforce_budget(self.sites, wa, self.hw, self.budget,
+                            self.hcfg.mode)
+        policy = {s.name: b for s, b in zip(self.sites, wa)}
+        loss = float(self.eval_policy(policy))
+        reward = -self.hcfg.quality_coef * (loss - self.base_loss)
+        for t, (s, aw, aa) in enumerate(traj):
+            done = t == len(traj) - 1
+            s2 = self.state(min(t + 1, len(self.sites) - 1), *wa[t]) \
+                if not done else np.zeros(STATE_DIM, np.float32)
+            r = reward if done else 0.0
+            agent_w.observe(s, aw, r, s2, done)
+            agent_a.observe(s, aa, r, s2, done)
+        used = resource(self.sites, wa, self.hw, self.hcfg.mode)
+        return {"policy": policy, "loss": loss, "reward": reward,
+                "resource": used, "budget": self.budget,
+                "base_resource": self.base_resource}
+
+
+def search(cfg, sites, eval_policy, hcfg: HAQConfig = HAQConfig(),
+           hw: Hardware = V5E_EDGE,
+           agents: Optional[Tuple[DDPG, DDPG]] = None,
+           progress: Optional[Callable[[dict], None]] = None) -> dict:
+    """Returns best policy + history (+ the trained agents for Table 7's
+    transfer experiment)."""
+    env = HAQEnv(cfg, sites, eval_policy, hcfg, hw)
+    if agents is None:
+        agent_w = DDPG(DDPGConfig(state_dim=STATE_DIM), seed=hcfg.seed)
+        agent_a = DDPG(DDPGConfig(state_dim=STATE_DIM), seed=hcfg.seed + 1)
+    else:
+        agent_w, agent_a = agents
+    best, hist = None, []
+    for ep in range(hcfg.episodes):
+        rec = env.rollout(agent_w, agent_a, explore=True)
+        agent_w.end_episode()
+        agent_a.end_episode()
+        hist.append({"episode": ep, "loss": rec["loss"],
+                     "reward": rec["reward"], "resource": rec["resource"]})
+        if best is None or rec["reward"] > best["reward"]:
+            best = rec
+        if progress and ep % 10 == 0:
+            progress(rec)
+    final = env.rollout(agent_w, agent_a, explore=False)
+    if final["reward"] > best["reward"]:
+        best = final
+    return {"best": best, "history": hist, "base_loss": env.base_loss,
+            "agents": (agent_w, agent_a),
+            "sites": [s.name for s in env.sites]}

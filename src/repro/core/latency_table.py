@@ -1,0 +1,82 @@
+"""Per-op latency lookup table + differentiable expected latency (paper Eq. 2).
+
+"To build the latency model we pre-compute the latency of each operator with
+all possible inputs. During search we query the lookup table." — the LUT here
+is precomputed from the TPU roofline simulator (hardware_model) for every
+candidate op of the LM search space at the target (batch, seq) shape, per
+hardware target.
+
+E[LAT] = sum_i sum_op p_{i,op} * F(op_i)          (Eq. 2)
+
+p = softmax(alpha) makes E[LAT] differentiable in the architecture
+parameters, which is what lets the paper fold hardware latency into the
+gradient-descent search loss (Eq. 3).
+"""
+from __future__ import annotations
+
+from typing import Dict, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hardware_model as hwm
+from repro.configs.supernet_lm import CANDIDATE_OPS
+
+
+def op_latency(op: str, cfg, batch: int, seq: int, hw: hwm.Hardware,
+               *, decode: bool = False) -> float:
+    """Latency of one candidate block-op at the given shape (seconds)."""
+    d = cfg.d_model
+    hd = cfg.resolved_head_dim
+    tokens = batch * (1 if decode else seq)
+    tp = min(hw.chips, 16)
+
+    def attn_block(window: int, e: int) -> float:
+        t = 0.0
+        H, K = cfg.num_heads, cfg.num_kv_heads
+        t += hwm.linear_cost(tokens, d, (H + 2 * K) * hd, tp=tp).latency(hw)
+        t += hwm.attention_cost(batch, 1 if decode else seq, seq, H, K, hd,
+                                window=window, decode=decode).latency(hw)
+        t += hwm.linear_cost(tokens, H * hd, d, tp=tp).latency(hw)
+        # gated FFN at expansion e: 3 matmuls
+        t += 3.0 * hwm.linear_cost(tokens, d, e * d, tp=tp).latency(hw)
+        return float(t)
+
+    if op == "zero":
+        return 0.0
+    if op == "mamba2_e2":
+        s = cfg.ssm
+        t = hwm.linear_cost(tokens, d, 2 * 2 * d, tp=tp).latency(hw)
+        t += hwm.ssd_cost(batch, 1 if decode else seq, 2 * d,
+                          s.d_state if s else 64,
+                          s.chunk if s else 128).latency(hw)
+        t += hwm.linear_cost(tokens, 2 * d, d, tp=tp).latency(hw)
+        return float(t)
+    table = {
+        "attn_full_e2": (0, 2), "attn_full_e4": (0, 4),
+        "attn_local1k_e2": (1024, 2), "attn_local1k_e4": (1024, 4),
+        "attn_local4k_e4": (4096, 4),
+    }
+    window, e = table[op]
+    return attn_block(window, e)
+
+
+def build_lut(cfg, batch: int, seq: int, hw: hwm.Hardware,
+              ops: Sequence[str] = CANDIDATE_OPS, *,
+              decode: bool = False) -> jnp.ndarray:
+    """(n_blocks, n_ops) latency table F — Eq. 2's per-op terms."""
+    row = np.array([op_latency(op, cfg, batch, seq, hw, decode=decode)
+                    for op in ops], np.float32)
+    return jnp.asarray(np.tile(row, (cfg.num_layers, 1)))
+
+
+def expected_latency(alpha: jax.Array, lut: jax.Array) -> jax.Array:
+    """Eq. 2: E[LAT] = sum_i <softmax(alpha_i), F_i>. Differentiable."""
+    p = jax.nn.softmax(alpha, axis=-1)
+    return jnp.sum(p * lut)
+
+
+def sampled_latency(gates: jax.Array, lut: jax.Array) -> jax.Array:
+    """Latency of one sampled (one-hot) architecture."""
+    return jnp.sum(gates * lut)

@@ -1,0 +1,137 @@
+"""Structured pruning transforms for LM layers (AMC's compression backend).
+
+Units are MXU-friendly structures: attention query-head GROUPS (GQA groups
+prune together so grouped attention stays well-formed), FFN hidden units, and
+MoE experts. Two modes:
+  * mask_*  — zero out pruned units (fast policy evaluation in the RL env;
+              shapes unchanged, so one jit serves every policy);
+  * slice_* — physically shrink the tensors (the final exported model).
+
+Importance criteria (magnitude-based, as AMC): L2 norm of the unit's
+outgoing weights.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+F32 = jnp.float32
+
+
+# ----------------------------------------------------------- importance ----
+# All functions accept optionally LAYER-STACKED params (leading scan dim):
+# a stacked slot is one prunable layer in AMC, so importances reduce over
+# every axis except the unit axis and the mask is shared across the stack.
+def _sum_except(a: jax.Array, unit_axis: int) -> jax.Array:
+    unit_axis %= a.ndim
+    axes = tuple(i for i in range(a.ndim) if i != unit_axis)
+    return jnp.sum(a.astype(F32) ** 2, axis=axes)
+
+
+def head_group_importance(attn_p) -> jax.Array:
+    """(n_kv,) importance of each GQA group = L2 of its wo rows + wq cols."""
+    wo = attn_p["wo"]                          # (..., H, hd, D)
+    wq = attn_p["wq"]                          # (..., D, H, hd)
+    H = wo.shape[-3]
+    K = attn_p["wk"].shape[-2]
+    G = H // K
+    per_head = jnp.sqrt(_sum_except(wo, -3) + _sum_except(wq, -2))
+    return per_head.reshape(K, G).sum(axis=1)
+
+
+def ffn_importance(ffn_p) -> jax.Array:
+    """(d_ff,) importance of each hidden unit."""
+    imp = _sum_except(ffn_p["w_out"], -2) + _sum_except(ffn_p["w_in"], -1)
+    if "w_gate" in ffn_p:
+        imp = imp + _sum_except(ffn_p["w_gate"], -1)
+    return jnp.sqrt(imp)
+
+
+def expert_importance(moe_p) -> jax.Array:
+    """(E,) router-norm + weight-norm importance of each expert."""
+    return jnp.sqrt(_sum_except(moe_p["router"], -1)
+                    + _sum_except(moe_p["w_out"], -3))
+
+
+def keep_mask(importance: jax.Array, keep_ratio) -> jax.Array:
+    """Binary mask keeping the top keep_ratio fraction (at least 1 unit).
+    Differentiable-free; keep_ratio may be traced (uses rank threshold)."""
+    n = importance.shape[0]
+    k = jnp.clip(jnp.round(keep_ratio * n), 1, n).astype(jnp.int32)
+    order = jnp.argsort(-importance)
+    ranks = jnp.argsort(order)
+    return (ranks < k).astype(F32)
+
+
+# ---------------------------------------------------------------- mask ----
+# masks broadcast against TRAILING axes, so layer-stacked leading dims pass
+# through untouched.
+def mask_attn(attn_p, group_mask: jax.Array):
+    """Zero out pruned GQA groups. group_mask (n_kv,)."""
+    K = group_mask.shape[0]
+    H = attn_p["wo"].shape[-3]
+    G = H // K
+    head_mask = jnp.repeat(group_mask, G)
+    out = dict(attn_p)
+    out["wq"] = attn_p["wq"] * head_mask[:, None].astype(attn_p["wq"].dtype)
+    out["wo"] = attn_p["wo"] * head_mask[:, None, None] \
+        .astype(attn_p["wo"].dtype)
+    out["wk"] = attn_p["wk"] * group_mask[:, None].astype(attn_p["wk"].dtype)
+    out["wv"] = attn_p["wv"] * group_mask[:, None].astype(attn_p["wv"].dtype)
+    return out
+
+
+def mask_ffn(ffn_p, unit_mask: jax.Array):
+    out = dict(ffn_p)
+    m = unit_mask.astype(ffn_p["w_in"].dtype)
+    out["w_in"] = ffn_p["w_in"] * m
+    if "w_gate" in ffn_p:
+        out["w_gate"] = ffn_p["w_gate"] * m
+    out["w_out"] = ffn_p["w_out"] * m[:, None]
+    return out
+
+
+def mask_experts(moe_p, expert_mask: jax.Array):
+    out = dict(moe_p)
+    out["router"] = moe_p["router"] + jnp.where(
+        expert_mask > 0, 0.0, -1e9).astype(moe_p["router"].dtype)
+    m = expert_mask.astype(moe_p["w_out"].dtype)
+    out["w_out"] = moe_p["w_out"] * m[:, None, None]
+    return out
+
+
+# --------------------------------------------------------------- slice ----
+def slice_ffn(ffn_p, keep_idx: np.ndarray):
+    out = {"w_in": ffn_p["w_in"][:, keep_idx],
+           "w_out": ffn_p["w_out"][keep_idx, :]}
+    if "w_gate" in ffn_p:
+        out["w_gate"] = ffn_p["w_gate"][:, keep_idx]
+    return out
+
+
+def slice_attn(attn_p, keep_groups: np.ndarray):
+    K = attn_p["wk"].shape[1]
+    H = attn_p["wq"].shape[1]
+    G = H // K
+    head_idx = np.concatenate([np.arange(g * G, (g + 1) * G)
+                               for g in keep_groups])
+    return {
+        "wq": attn_p["wq"][:, head_idx],
+        "wk": attn_p["wk"][:, keep_groups],
+        "wv": attn_p["wv"][:, keep_groups],
+        "wo": attn_p["wo"][head_idx],
+    }
+
+
+# ------------------------------------------------------------ flops ----
+def block_flops(cfg, tokens: int) -> Dict[str, float]:
+    """Per-block FLOPs split by prunable site (for AMC states/budget)."""
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    H, K = cfg.num_heads, cfg.num_kv_heads
+    gated = cfg.activation in ("swiglu", "geglu")
+    attn = 2.0 * tokens * d * (H + 2 * K) * hd + 2.0 * tokens * H * hd * d
+    ffn = 2.0 * tokens * d * cfg.d_ff * (3 if gated else 2)
+    return {"attn": attn, "ffn": ffn}

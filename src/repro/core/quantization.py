@@ -1,0 +1,124 @@
+"""Quantizers shared by HAQ, the PACT baseline, and the serving path.
+
+Weights: symmetric per-output-channel int quantization (paper's linear
+quantization; centroids/k-means from Deep Compression don't map to the MXU).
+Activations: PACT-style clipped range [Choi et al. 2018], the paper's §4
+comparison baseline.
+
+``fake_quant_*`` return dequantized fp values (QAT / HAQ policy evaluation);
+``quantize_weight`` returns the int tensor + scale consumed by
+``repro.kernels.quant_matmul`` at serving time.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+def qmax(bits) -> jax.Array:
+    return 2.0 ** (jnp.asarray(bits, F32) - 1.0) - 1.0
+
+
+def quantize_weight(w: jax.Array, bits, *, axis: int = -1
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric per-channel (along `axis`-complement) int quantization.
+    Returns (q int8-ish stored values, scale) with w ~= q * scale."""
+    wf = w.astype(F32)
+    red = tuple(i for i in range(w.ndim) if i != (axis % w.ndim))
+    amax = jnp.max(jnp.abs(wf), axis=red, keepdims=True)
+    scale = amax / jnp.maximum(qmax(bits), 1.0) + 1e-12
+    q = jnp.clip(jnp.round(wf / scale), -qmax(bits), qmax(bits))
+    return q, scale
+
+
+def fake_quant_weight(w: jax.Array, bits, *, axis: int = -1) -> jax.Array:
+    q, scale = quantize_weight(w, bits, axis=axis)
+    return (q * scale).astype(w.dtype)
+
+
+def fake_quant_act(x: jax.Array, bits, clip: float = 6.0) -> jax.Array:
+    """PACT: clip to [-c, c] (signed) then uniform-quantize."""
+    xf = x.astype(F32)
+    c = jnp.asarray(clip, F32)
+    xf = jnp.clip(xf, -c, c)
+    scale = c / jnp.maximum(qmax(bits), 1.0)
+    return (jnp.round(xf / scale) * scale).astype(x.dtype)
+
+
+def quant_error(w: jax.Array, bits, *, axis: int = -1) -> jax.Array:
+    """Relative L2 reconstruction error (HAQ state feature)."""
+    wq = fake_quant_weight(w, bits, axis=axis)
+    num = jnp.sum(jnp.square((w - wq).astype(F32)))
+    den = jnp.sum(jnp.square(w.astype(F32))) + 1e-12
+    return jnp.sqrt(num / den)
+
+
+# ------------------------------------------------------- policy -> params ----
+def apply_weight_policy(params, policy: Dict[str, int], site_of) -> dict:
+    """Fake-quantize every weight leaf whose site (via site_of(path)) appears
+    in `policy` (site -> bits). Non-matmul leaves (norms, biases) stay fp."""
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    treedef = jax.tree.structure(params)
+    out = []
+    for path, leaf in flat:
+        site = site_of(jax.tree_util.keystr(path), leaf)
+        if site is not None and site in policy and leaf.ndim >= 2:
+            out.append(fake_quant_weight(leaf, policy[site]))
+        else:
+            out.append(leaf)
+    return jax.tree.unflatten(treedef, out)
+
+
+def default_site_of(keystr: str, leaf) -> str | None:
+    """Map a param path to a HAQ policy site (layer-kind granularity)."""
+    for token, site in [
+        ("'wq'", "attn_q"), ("'wk'", "attn_k"), ("'wv'", "attn_v"),
+        ("'wo'", "attn_o"), ("'w_in'", "ffn_in"), ("'w_gate'", "ffn_gate"),
+        ("'w_out'", "ffn_out"), ("'in_proj'", "ssm_in"),
+        ("'out_proj'", "ssm_out"), ("'lm_head'", "lm_head"),
+        ("'embed'", "embed"), ("'fuse_in'", "fuse"), ("'fuse_out'", "fuse"),
+    ]:
+        if token in keystr:
+            return site
+    return None
+
+
+def make_quant_dot(policy: Dict[str, Tuple[int, int]], *, use_kernel=False):
+    """Build the `dot` hook threaded through the models: per-site
+    (w_bits, a_bits) fake-quant (or the Pallas int8 kernel when use_kernel
+    and bits allow). Sites not in the policy run in bf16."""
+
+    def dot(x, w, name):
+        eq = _einsum_for(x, w)
+        if name not in policy:
+            return jnp.einsum(eq, x, w)
+        w_bits, a_bits = policy[name]
+        if w_bits >= 16 and a_bits >= 16:   # full precision: exact no-op
+            return jnp.einsum(eq, x, w)
+        if use_kernel and w.ndim == 2 and w_bits <= 8:
+            from repro.kernels import ops as kops
+            return kops.quant_matmul(x, w, w_bits=int(w_bits),
+                                     a_bits=int(a_bits))
+        wq = fake_quant_weight(w, w_bits)
+        xq = fake_quant_act(x, a_bits) if a_bits and a_bits < 16 else x
+        return jnp.einsum(eq, xq, wq)
+
+    return dot
+
+
+def _einsum_for(x, w):
+    """Reconstruct the einsum the model sites use, from operand ranks."""
+    if w.ndim == 2:
+        return "...d,df->...f"
+    if x.ndim == 4 and w.ndim == 3:
+        return "bsnh,nhd->bsd"     # attention output projection
+    if w.ndim == 3 and x.ndim == 3 and w.shape[0] == x.shape[0] \
+            and x.shape[-1] == w.shape[1]:
+        return "ecd,edf->ecf"      # moe expert batch
+    if w.ndim == 3:
+        return "bsd,dnh->bsnh"     # qkv projection
+    raise ValueError((x.shape, w.shape))

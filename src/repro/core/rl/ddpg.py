@@ -1,0 +1,154 @@
+"""DDPG actor-critic in pure JAX — the agent behind AMC (§3) and HAQ (§4).
+
+Continuous action in [0, 1] per step (sparsity ratio / normalized bitwidth),
+truncated-normal exploration noise with decay, soft target updates, and a
+numpy ring-buffer replay. Small MLPs (the paper's agents are 2x300 hidden) so
+a full search runs in seconds on CPU.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+F32 = jnp.float32
+
+
+@dataclasses.dataclass
+class DDPGConfig:
+    state_dim: int
+    hidden: int = 128
+    actor_lr: float = 1e-3
+    critic_lr: float = 1e-3
+    gamma: float = 1.0          # episodic, finite-horizon (AMC uses 1)
+    tau: float = 0.01
+    noise0: float = 0.5
+    noise_decay: float = 0.99
+    batch: int = 64
+    buffer: int = 4096
+    warmup_episodes: int = 8
+
+
+def _mlp_init(key, sizes):
+    params = []
+    for i, (a, b) in enumerate(zip(sizes[:-1], sizes[1:])):
+        key, k = jax.random.split(key)
+        w = jax.random.normal(k, (a, b), F32) / np.sqrt(a)
+        params.append({"w": w, "b": jnp.zeros((b,), F32)})
+    return params
+
+
+def _mlp(params, x, final_act=None):
+    for i, layer in enumerate(params):
+        x = x @ layer["w"] + layer["b"]
+        if i < len(params) - 1:
+            x = jax.nn.relu(x)
+    return final_act(x) if final_act else x
+
+
+def actor_fwd(params, s):
+    return _mlp(params, s, jax.nn.sigmoid)[..., 0]  # action in (0,1)
+
+
+def critic_fwd(params, s, a):
+    x = jnp.concatenate([s, a[..., None]], axis=-1)
+    return _mlp(params, x)[..., 0]
+
+
+class ReplayBuffer:
+    def __init__(self, cap: int, state_dim: int):
+        self.cap = cap
+        self.s = np.zeros((cap, state_dim), np.float32)
+        self.a = np.zeros((cap,), np.float32)
+        self.r = np.zeros((cap,), np.float32)
+        self.s2 = np.zeros((cap, state_dim), np.float32)
+        self.done = np.zeros((cap,), np.float32)
+        self.n = 0
+        self.ptr = 0
+
+    def add(self, s, a, r, s2, done):
+        i = self.ptr
+        self.s[i], self.a[i], self.r[i] = s, a, r
+        self.s2[i], self.done[i] = s2, done
+        self.ptr = (i + 1) % self.cap
+        self.n = min(self.n + 1, self.cap)
+
+    def sample(self, rng: np.random.Generator, batch: int):
+        idx = rng.integers(0, self.n, size=batch)
+        return (self.s[idx], self.a[idx], self.r[idx], self.s2[idx],
+                self.done[idx])
+
+
+class DDPG:
+    def __init__(self, cfg: DDPGConfig, seed: int = 0):
+        self.cfg = cfg
+        key = jax.random.PRNGKey(seed)
+        ka, kc = jax.random.split(key)
+        self.actor = _mlp_init(ka, [cfg.state_dim, cfg.hidden, cfg.hidden, 1])
+        self.critic = _mlp_init(kc, [cfg.state_dim + 1, cfg.hidden,
+                                     cfg.hidden, 1])
+        self.t_actor = jax.tree.map(lambda x: x, self.actor)
+        self.t_critic = jax.tree.map(lambda x: x, self.critic)
+        self.buffer = ReplayBuffer(cfg.buffer, cfg.state_dim)
+        self.rng = np.random.default_rng(seed)
+        self.noise = cfg.noise0
+        self.episode = 0
+        self._train_step = jax.jit(self._make_train_step())
+
+    # ---------------------------------------------------------------- api --
+    def act(self, state: np.ndarray, explore: bool = True) -> float:
+        a = float(actor_fwd(self.actor, jnp.asarray(state, F32)))
+        if explore:
+            # truncated-normal exploration (AMC's choice)
+            a = float(np.clip(self.rng.normal(a, self.noise), 0.0, 1.0))
+        return a
+
+    def observe(self, s, a, r, s2, done):
+        self.buffer.add(s, a, r, s2, float(done))
+
+    def end_episode(self, updates: int = 32):
+        self.episode += 1
+        self.noise *= self.cfg.noise_decay
+        if self.episode < self.cfg.warmup_episodes \
+                or self.buffer.n < self.cfg.batch:
+            return {}
+        losses = {}
+        for _ in range(updates):
+            batch = self.buffer.sample(self.rng, self.cfg.batch)
+            (self.actor, self.critic, self.t_actor, self.t_critic,
+             losses) = self._train_step(
+                self.actor, self.critic, self.t_actor, self.t_critic,
+                *[jnp.asarray(b) for b in batch])
+        return {k: float(v) for k, v in losses.items()}
+
+    # ------------------------------------------------------------- update --
+    def _make_train_step(self):
+        cfg = self.cfg
+
+        def step(actor, critic, t_actor, t_critic, s, a, r, s2, done):
+            q_next = critic_fwd(t_critic, s2, actor_fwd(t_actor, s2))
+            target = r + cfg.gamma * (1.0 - done) * q_next
+
+            def critic_loss(cp):
+                q = critic_fwd(cp, s, a)
+                return jnp.mean(jnp.square(q - jax.lax.stop_gradient(target)))
+
+            def actor_loss(ap):
+                return -jnp.mean(critic_fwd(critic, s, actor_fwd(ap, s)))
+
+            cl, gc = jax.value_and_grad(critic_loss)(critic)
+            al, ga = jax.value_and_grad(actor_loss)(actor)
+            critic = jax.tree.map(lambda p, g: p - cfg.critic_lr * g,
+                                  critic, gc)
+            actor = jax.tree.map(lambda p, g: p - cfg.actor_lr * g, actor, ga)
+            t_critic = jax.tree.map(
+                lambda t, p: (1 - cfg.tau) * t + cfg.tau * p, t_critic, critic)
+            t_actor = jax.tree.map(
+                lambda t, p: (1 - cfg.tau) * t + cfg.tau * p, t_actor, actor)
+            return actor, critic, t_actor, t_critic, \
+                {"critic_loss": cl, "actor_loss": al}
+
+        return step

@@ -1,0 +1,146 @@
+"""Path-level binarized supernet (paper §2 / ProxylessNAS), LM-adapted.
+
+Each of the N blocks holds 7 candidate ops (configs/supernet_lm.py). During
+search, exactly ONE path per block is active (Eq. 1: x_l = sum_i g_i o_i(x),
+g ~ Multinomial(softmax(alpha))) — implemented with `lax.switch`, so only the
+sampled op's compute graph executes: the paper's GPU-hours/GPU-memory saving
+("path-level binarization") maps directly to jit-time dead-path elimination.
+
+Gradient estimator: the sampled path's output is scaled by
+(p_i - stop_grad(p_i) + 1), the straight-through estimator of the paper's
+∂L/∂α_i ≈ Σ_j ∂L/∂g_j ∂p_j/∂α_i with the sampled g as the evaluation point.
+The latency term (Eq. 2/3) uses the full softmax, so every α receives a dense
+hardware-cost gradient each step even though only one path computes.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.supernet_lm import BACKBONE, CANDIDATE_OPS
+from repro.models import attention as attn
+from repro.models import ssm as ssm_lib
+from repro.models.layers import ffn_apply, ffn_defs, norm_def, rms_norm
+from repro.models.params import PDef, init_params, logical_specs
+from repro.models.transformer import embed_tokens, unembed, chunked_ce
+
+F32 = jnp.float32
+
+OP_SPECS = {
+    "attn_full_e2": dict(kind="global", window=0, expand=2, arm="attn"),
+    "attn_full_e4": dict(kind="global", window=0, expand=4, arm="attn"),
+    "attn_local1k_e2": dict(kind="local", window=1024, expand=2, arm="attn"),
+    "attn_local1k_e4": dict(kind="local", window=1024, expand=4, arm="attn"),
+    "attn_local4k_e4": dict(kind="local", window=4096, expand=4, arm="attn"),
+    "mamba2_e2": dict(arm="ssm"),
+    "zero": dict(arm="zero"),
+}
+
+
+# ------------------------------------------------------------ parameters ----
+def _op_defs(cfg, op: str) -> Dict[str, Any]:
+    spec = OP_SPECS[op]
+    d = cfg.d_model
+    if spec["arm"] == "zero":
+        return {"_": PDef((1,), ("null",), "zeros")}
+    if spec["arm"] == "ssm":
+        return {"ln": norm_def(d), "mamba": ssm_lib.mamba_defs(cfg)}
+    return {
+        "ln1": norm_def(d),
+        "attn": attn.attn_defs(d, cfg.num_heads, cfg.num_kv_heads,
+                               cfg.resolved_head_dim),
+        "ln2": norm_def(d),
+        "ffn": ffn_defs(d, spec["expand"] * d, cfg.activation),
+    }
+
+
+def supernet_defs(cfg=BACKBONE) -> Dict[str, Any]:
+    blocks = []
+    for i in range(cfg.num_layers):
+        blocks.append({op: _op_defs(cfg, op) for op in CANDIDATE_OPS})
+    return {
+        "embed": PDef((cfg.padded_vocab, cfg.d_model), ("vocab", "embed"),
+                      "normal"),
+        "blocks": blocks,  # python list: per-block independent params
+        "final_norm": norm_def(cfg.d_model),
+        "lm_head": PDef((cfg.d_model, cfg.padded_vocab), ("embed", "vocab"),
+                        "scaled"),
+    }
+
+
+def init_supernet(key, cfg=BACKBONE):
+    params = init_params(supernet_defs(cfg), key)
+    alpha = jnp.zeros((cfg.num_layers, len(CANDIDATE_OPS)), F32)
+    return params, alpha
+
+
+# ----------------------------------------------------------------- apply ----
+def _apply_op(op: str, p, x, cfg, positions):
+    spec = OP_SPECS[op]
+    if spec["arm"] == "zero":
+        return x * 1.0
+    if spec["arm"] == "ssm":
+        y, _ = ssm_lib.mamba_block_fwd(p["mamba"],
+                                       rms_norm(x, p["ln"], cfg.norm_eps), cfg)
+        return x + y
+    sub_cfg = cfg.replace(window_size=spec["window"] or cfg.window_size)
+    a, _ = attn.attention_fwd(p["attn"], rms_norm(x, p["ln1"], cfg.norm_eps),
+                              spec["kind"], sub_cfg, positions)
+    x = x + a
+    f = ffn_apply(p["ffn"], rms_norm(x, p["ln2"], cfg.norm_eps),
+                  cfg.activation)
+    return x + f
+
+
+def supernet_forward(params, alpha, gates, batch, cfg=BACKBONE):
+    """gates: (N,) int32 sampled op index per block (path binarization).
+
+    Returns final hidden states; CE computed by the caller (chunked)."""
+    tokens = batch["tokens"]
+    x = embed_tokens(params, tokens, cfg)
+    B, S = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    probs = jax.nn.softmax(alpha, axis=-1)
+
+    for i, block in enumerate(params["blocks"]):
+        branches = [
+            (lambda p=block[op], op=op:
+             lambda xx: _apply_op(op, p, xx, cfg, positions))()
+            for op in CANDIDATE_OPS
+        ]
+        y = jax.lax.switch(gates[i], branches, x)
+        # straight-through: scale by (p - sg(p) + 1) so dL/dalpha_i flows
+        p_i = probs[i, gates[i]]
+        x = y * (p_i - jax.lax.stop_gradient(p_i) + 1.0)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x
+
+
+def supernet_loss(params, alpha, gates, batch, cfg=BACKBONE):
+    hidden = supernet_forward(params, alpha, gates, batch, cfg)
+    return chunked_ce(params, hidden, batch["labels"], cfg)
+
+
+def sample_gates(key, alpha) -> jax.Array:
+    """Multinomial path sampling per block (Eq. 1's g)."""
+    return jax.random.categorical(key, alpha, axis=-1)
+
+
+def derive_arch(alpha) -> List[str]:
+    """argmax op per block — the specialized child architecture."""
+    idx = jnp.argmax(alpha, axis=-1)
+    return [CANDIDATE_OPS[int(i)] for i in idx]
+
+
+def child_param_count(arch: List[str], cfg=BACKBONE) -> int:
+    import numpy as np
+    from repro.models.params import param_count
+    total = param_count({"e": PDef((cfg.padded_vocab, cfg.d_model),
+                                   ("vocab", "embed"))})
+    total *= 2  # embed + head
+    for op in arch:
+        defs = _op_defs(cfg, op)
+        total += param_count(defs) if OP_SPECS[op]["arm"] != "zero" else 0
+    return total

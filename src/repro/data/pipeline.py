@@ -1,0 +1,94 @@
+"""Deterministic synthetic LM data pipeline, host-sharded and restart-exact.
+
+Design requirements from the fault-tolerance story (DESIGN.md §3):
+  * stateless-deterministic: batch(step) is a pure function of (seed, step),
+    so a restarted job resumes mid-epoch with byte-identical data — no
+    shuffle-buffer state to checkpoint;
+  * host-sharded: each host materializes only its slice of the global batch
+    (process_index-based), like a tf.data service / Grain shard;
+  * structured: Zipf unigrams + copy spans + induction patterns give models
+    a real learnable signal (loss decreases), so examples/benchmarks can
+    demonstrate end-to-end learning on CPU.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, Optional
+
+import jax
+import numpy as np
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    zipf_a: float = 1.4
+    copy_frac: float = 0.5      # fraction of sequence that is copied prefix
+
+
+def _host_slice(global_batch: int) -> tuple[int, int]:
+    n = jax.process_count()
+    idx = jax.process_index()
+    per = global_batch // n
+    return idx * per, per
+
+
+def batch_at(dcfg: DataConfig, step: int, *, full: bool = False
+             ) -> Dict[str, np.ndarray]:
+    """The batch for `step` (pure function). full=True ignores host slicing."""
+    start, per = (0, dcfg.global_batch) if full else _host_slice(
+        dcfg.global_batch)
+    rows = []
+    for r in range(start, start + per):
+        rng = np.random.default_rng(
+            (dcfg.seed * 1_000_003 + step) * 65_521 + r)
+        toks = np.clip(rng.zipf(dcfg.zipf_a, size=dcfg.seq_len), 2,
+                       dcfg.vocab_size - 1)
+        half = int(dcfg.seq_len * dcfg.copy_frac)
+        if half > 1:
+            toks[half:2 * half] = toks[:half]   # copy span (induction signal)
+        rows.append(toks)
+    tokens = np.stack(rows).astype(np.int32)
+    return {"tokens": tokens, "labels": tokens}
+
+
+def batches(dcfg: DataConfig, start_step: int = 0
+            ) -> Iterator[Dict[str, np.ndarray]]:
+    step = start_step
+    while True:
+        yield batch_at(dcfg, step)
+        step += 1
+
+
+def batch_for_model(model, shape, dcfg: Optional[DataConfig], step: int
+                    ) -> Dict[str, jnp.ndarray]:
+    """Model-family-aware batch assembly (stub frontends get random embeds,
+    deterministically from step)."""
+    cfg = model.cfg
+    dcfg = dcfg or DataConfig(cfg.vocab_size, shape.seq_len,
+                              shape.global_batch)
+    rng = np.random.default_rng(dcfg.seed * 7 + step)
+    if cfg.is_encdec:
+        Sd = max(shape.seq_len // cfg.dec_ratio, 2)
+        dec = batch_at(dataclasses.replace(dcfg, seq_len=Sd), step)
+        frames = rng.standard_normal(
+            (shape.global_batch, shape.seq_len, cfg.d_model)).astype(np.float32)
+        return {"frames": jnp.asarray(frames, jnp.bfloat16),
+                "tokens": jnp.asarray(dec["tokens"]),
+                "labels": jnp.asarray(dec["labels"])}
+    if cfg.frontend == "vision_stub":
+        Sp = int(shape.seq_len * cfg.patch_frac)
+        St = shape.seq_len - Sp
+        txt = batch_at(dataclasses.replace(dcfg, seq_len=St), step)
+        patches = rng.standard_normal(
+            (shape.global_batch, Sp, cfg.d_model)).astype(np.float32)
+        return {"patches": jnp.asarray(patches, jnp.bfloat16),
+                "tokens": jnp.asarray(txt["tokens"]),
+                "labels": jnp.asarray(txt["labels"])}
+    b = batch_at(dcfg, step)
+    return {"tokens": jnp.asarray(b["tokens"]),
+            "labels": jnp.asarray(b["labels"])}

@@ -1,0 +1,114 @@
+"""Fault tolerance & elasticity for the multi-pod trainer.
+
+What runs where:
+  * checkpoint/restart — the trainer loop (training/loop.py) saves async
+    every K steps and discovers the restart point via ckpt.latest_step; the
+    data pipeline is stateless-deterministic so resume is exact.
+  * straggler mitigation — per-step deadline monitor: a host whose step time
+    exceeds `multiplier` x the trailing median is flagged; after
+    `strikes` consecutive flags the runner is asked to evict/replace the
+    host (on CPU we log and simulate). Synchronous SPMD training cannot
+    proceed without the host, so mitigation = evict + elastic re-mesh.
+  * elastic re-mesh — rebuild the mesh with fewer data-parallel rows and
+    reshard the checkpointed state onto it: shrink_mesh() computes the
+    largest valid (data', model) grid from the survivors, and the sharding
+    rules (divisibility-aware) re-derive every spec for the new mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Callable, Deque, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.distributed import sharding as shlib
+
+
+@dataclasses.dataclass
+class StragglerConfig:
+    window: int = 16          # trailing steps for the median
+    multiplier: float = 2.0   # deadline = multiplier x median
+    strikes: int = 3          # consecutive violations before eviction
+
+
+class StragglerMonitor:
+    """Detects slow steps; in a real deployment the callback triggers the
+    cluster runner's evict-and-replace. Synchronous data-parallel training
+    makes per-host timing visible as global step-time inflation."""
+
+    def __init__(self, cfg: StragglerConfig = StragglerConfig(),
+                 on_straggler: Optional[Callable[[dict], None]] = None):
+        self.cfg = cfg
+        self.times: Deque[float] = deque(maxlen=cfg.window)
+        self.strikes = 0
+        self.events: List[dict] = []
+        self.on_straggler = on_straggler
+
+    def record(self, step: int, dt: float) -> bool:
+        """Returns True if this step breached the deadline."""
+        breached = False
+        if len(self.times) >= 4:
+            med = float(np.median(self.times))
+            if dt > self.cfg.multiplier * med:
+                self.strikes += 1
+                breached = True
+                ev = {"step": step, "dt": dt, "median": med,
+                      "strikes": self.strikes}
+                self.events.append(ev)
+                if self.strikes >= self.cfg.strikes and self.on_straggler:
+                    self.on_straggler(ev)
+                    self.strikes = 0
+            else:
+                self.strikes = 0
+        self.times.append(dt)
+        return breached
+
+
+def shrink_mesh(n_devices: int, model_axis: int):
+    """Largest (data, model) mesh from surviving devices (elastic re-mesh).
+    Keeps the model axis intact (TP groups must stay whole); drops remainder
+    devices beyond the largest multiple."""
+    data = n_devices // model_axis
+    assert data >= 1, (n_devices, model_axis)
+    usable = data * model_axis
+    devs = jax.devices()[:usable]
+    import numpy as _np
+    from jax.sharding import Mesh
+    return Mesh(_np.asarray(devs).reshape(data, model_axis),
+                ("data", "model"))
+
+
+def reshard_state(state, model, tcfg, new_mesh):
+    """Re-derive every sharding for the new mesh and device_put the state.
+    Used after elastic shrink/grow; the divisibility-aware rules recompute
+    legal specs (a batch no longer divisible falls back gracefully)."""
+    from repro.training.steps import train_state_logical_specs
+    specs = shlib.specs_for(
+        jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state),
+        train_state_logical_specs(model, tcfg), new_mesh)
+    return jax.device_put(state, specs)
+
+
+class Heartbeat:
+    """Host-liveness file heartbeat (the cluster-runner contract): each host
+    touches its file every step; a coordinator (or the runner) declares a
+    host dead after `timeout_s` of silence. CPU-side stand-in for the TPU
+    runtime's health service."""
+
+    def __init__(self, path: str, timeout_s: float = 60.0):
+        self.path = path
+        self.timeout_s = timeout_s
+
+    def beat(self):
+        with open(self.path, "w") as f:
+            f.write(str(time.time()))
+
+    def alive(self) -> bool:
+        try:
+            with open(self.path) as f:
+                return time.time() - float(f.read()) < self.timeout_s
+        except (FileNotFoundError, ValueError):
+            return False

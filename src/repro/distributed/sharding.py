@@ -1,0 +1,177 @@
+"""Divisibility-aware logical→mesh sharding rules.
+
+Every tensor in the system carries logical axis names (see models/params.py).
+``specs_for`` maps a pytree of (shapes × logical axes) onto a mesh by walking
+each tensor's dims left-to-right and assigning the first *legal* candidate
+mesh-axis tuple per logical axis — legal means (a) the dim is divisible by the
+mesh-axes product and (b) no mesh axis is used twice within one tensor.
+
+This is what lets one fixed production mesh (16×16 / 2×16×16) serve all ten
+architectures: gemma2's 8 Q heads or granite's 49155 vocab simply fall through
+to the next candidate instead of failing to lower (see DESIGN.md §3).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# fsdp == param/batch sharding axes; model == tensor-parallel axis.
+FSDP = ("pod", "data")
+
+# Candidate mesh-axis tuples per logical axis, in priority order. The empty
+# tuple (replicate) is always the implicit last resort.
+CANDIDATES: Dict[str, Sequence[Tuple[str, ...]]] = {
+    # params
+    "vocab": [("model",)],
+    "embed": [FSDP, ("data",)],
+    "embed2": [],
+    "heads": [("model",)],
+    "kv_heads": [("model",)],
+    "head_dim": [],
+    "d_ff": [("model",)],
+    "experts": [("model",)],
+    "expert_ff": [("model",)],
+    "ssm_inner": [("model",)],
+    "ssm_heads": [("model",)],
+    "ssm_state": [],
+    "conv": [],
+    "layer": [],
+    "null": [],
+    "moment_blocks": [FSDP, ("data",)],
+    # activations / caches
+    "batch": [FSDP, ("data",)],
+    "seq": [("data",)],
+    "cache_seq": [("model",), ("data",)],
+    "embed_act": [],
+}
+
+
+def _axes_in_mesh(mesh: Mesh, axes: Tuple[str, ...]) -> Optional[Tuple[str, ...]]:
+    present = tuple(a for a in axes if a in mesh.shape)
+    return present or None
+
+
+def choose_spec(shape: Tuple[int, ...], logical: Tuple[Optional[str], ...],
+                mesh: Mesh) -> P:
+    assert len(shape) == len(logical), (shape, logical)
+    used: set = set()
+    out = []
+    for dim, name in zip(shape, logical):
+        placed = None
+        for cand in CANDIDATES.get(name or "", []):
+            axes = _axes_in_mesh(mesh, cand)
+            if not axes:
+                continue
+            if any(a in used for a in axes):
+                continue
+            size = int(np.prod([mesh.shape[a] for a in axes]))
+            if dim % size != 0:
+                continue
+            placed = axes if len(axes) > 1 else axes[0]
+            used.update(axes)
+            break
+        out.append(placed)
+    while out and out[-1] is None:  # trailing Nones are implicit
+        out.pop()
+    return P(*out)
+
+
+def specs_for(abstract: Any, logical: Any, mesh: Mesh) -> Any:
+    """Pytree of NamedShardings matching `abstract` (ShapeDtypeStructs)."""
+    is_axes = lambda x: x is None or (
+        isinstance(x, tuple) and all(a is None or isinstance(a, str)
+                                     for a in x))
+
+    flat_a, tdef = jax.tree.flatten(abstract)
+    flat_l = tdef.flatten_up_to(logical)
+    out = []
+    for a, l in zip(flat_a, flat_l):
+        if l is None:
+            l = (None,) * a.ndim
+        out.append(NamedSharding(mesh, choose_spec(a.shape, l, mesh)))
+    return jax.tree.unflatten(tdef, out)
+
+
+def scalar_sharding(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())
+
+
+def make_ac(mesh: Mesh, mode: str = "dp"):
+    """Activation-sharding hook threaded through the models.
+
+    mode="dp":     residual stream (batch=fsdp, seq=None, embed=None) —
+                   Megatron-style TP: activations replicated over the model
+                   axis, XLA inserts fp32 partial-sum all-reduces after every
+                   TP matmul (~3x B*S*d f32 per layer: the dominant
+                   collective in the baseline roofline).
+    mode="seq_tp": sequence-parallel TP (Korthikanti et al. 2022): between
+                   blocks the residual is ALSO sharded seq-over-model, so
+                   XLA lowers the boundary to bf16 all-gather +
+                   reduce-scatter instead of fp32 all-reduce, and the
+                   norms/residual math runs 1/TP as large."""
+    fsdp = _axes_in_mesh(mesh, FSDP)
+
+    def _batch_axes(b: int):
+        if fsdp:
+            size = int(np.prod([mesh.shape[a] for a in fsdp]))
+            if b % size == 0:
+                return fsdp if len(fsdp) > 1 else fsdp[0]
+        if "data" in mesh.shape and b % mesh.shape["data"] == 0:
+            return "data"
+        return None
+
+    model_ok = "model" in mesh.shape
+
+    def ac(x, kind):
+        # NOTE "moe_buf" is intentionally a no-op: constraining the dispatch
+        # buffer (E, C@data, D) was MEASURED to make collectives 7x WORSE
+        # (48.8s -> 342.8s, granite-moe train_4k) — the capacity-sharded
+        # buffer fights the D@fsdp expert einsums. See EXPERIMENTS.md §Perf
+        # M2 (refuted) and the shard_map local-dispatch plan.
+        ba = _batch_axes(x.shape[0])
+        if ba is None:
+            return x
+        if kind == "resid" and x.ndim == 3:
+            if mode == "seq_tp" and model_ok \
+                    and x.shape[1] % mesh.shape["model"] == 0 \
+                    and x.shape[1] > 1:
+                return jax.lax.with_sharding_constraint(
+                    x, NamedSharding(mesh, P(ba, "model", None)))
+            return jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, P(ba)))
+        # flash-decoding-style sequence-parallel decode attention: q tiny ->
+        # replicated over model; kv/scores sharded over the cache-seq dim.
+        # Without these hints XLA reshards the CACHE to match heads-sharded
+        # q: an 80 GiB/token all-gather (EXPERIMENTS.md §Perf D2).
+        if kind == "decode_q" and x.ndim == 4:
+            return jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, P(ba)))
+        if kind == "decode_kv" and x.ndim == 4 and model_ok \
+                and x.shape[1] % mesh.shape["model"] == 0:
+            return jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, P(ba, "model")))
+        if kind == "decode_scores" and x.ndim == 4 and model_ok \
+                and x.shape[-1] % mesh.shape["model"] == 0:
+            return jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, P(ba, None, None, "model")))
+        return x
+
+    return ac
+
+
+def describe(shardings: Any, abstract: Any, limit: int = 0) -> str:
+    """Human-readable sharding table (debug / EXPERIMENTS.md)."""
+    lines = []
+    flat_s = jax.tree.leaves(shardings)
+    flat_a, _ = jax.tree.flatten(abstract)
+    paths = [jax.tree_util.keystr(p)
+             for p, _ in jax.tree_util.tree_flatten_with_path(abstract)[0]]
+    for path, s, a in zip(paths, flat_s, flat_a):
+        lines.append(f"{path:70s} {str(a.shape):28s} {s.spec}")
+        if limit and len(lines) >= limit:
+            lines.append("...")
+            break
+    return "\n".join(lines)

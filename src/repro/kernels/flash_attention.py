@@ -1,0 +1,121 @@
+"""Pallas TPU kernel: flash attention forward (serving prefill hot-spot).
+
+Grid: (batch*kv_heads, q_blocks); each program owns one (b, kv-head, q-block)
+tile and loops over kv blocks with fp32 (m, l, acc) VMEM scratch. GQA is
+handled by processing all G query heads of the kv-head group in one tile
+(q tile shape (G*bq, hd)) so the kv block is loaded from HBM once per group —
+the bandwidth win GQA exists for.
+
+Causal blocks beyond the diagonal are skipped via the kv-block upper bound
+(true compute skipping, unlike the XLA twin in models/flash.py which masks).
+Local windows additionally bound the kv range from below.
+
+Forward-only by design: training runs the XLA twin (custom VJP); this kernel
+is the serving path. Validated in interpret mode vs kernels/ref.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+F32 = jnp.float32
+NEG = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, bq, bkv, seq_kv, G, hd,
+                  causal, window, cap, scale):
+    # q_ref: (G*bq, hd) one q-block for all G heads of this kv group
+    # k_ref/v_ref: (seq_kv, hd) the full kv stream of this group (VMEM-
+    #              resident per program; fine at serving block sizes)
+    qi = pl.program_id(1)
+    q = q_ref[...].reshape(G * bq, hd).astype(F32) * scale
+
+    n_kv = seq_kv // bkv
+    if causal:
+        # kv blocks strictly above the diagonal contribute nothing
+        hi = jnp.minimum(((qi + 1) * bq + bkv - 1) // bkv, n_kv)
+    else:
+        hi = n_kv
+    lo = 0
+    if window:
+        lo = jnp.maximum((qi * bq - window) // bkv, 0)
+
+    k_all = k_ref[...].reshape(seq_kv, hd)
+    v_all = v_ref[...].reshape(seq_kv, hd)
+
+    def body(j, carry):
+        m, l, acc = carry
+        k = jax.lax.dynamic_slice(k_all, (j * bkv, 0), (bkv, hd)) \
+            .astype(F32)
+        v = jax.lax.dynamic_slice(v_all, (j * bkv, 0), (bkv, hd)) \
+            .astype(F32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=F32)  # (G*bq, bkv)
+        if cap:
+            s = cap * jnp.tanh(s / cap)
+        qpos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (G * bq, bkv),
+                                                  0) % bq
+        # NOTE: iota over the fused (G, bq) rows: row r belongs to q position
+        # qi*bq + r % bq (heads share positions)
+        kpos = j * bkv + jax.lax.broadcasted_iota(jnp.int32, (G * bq, bkv), 1)
+        valid = jnp.ones_like(s, dtype=jnp.bool_)
+        if causal:
+            valid &= kpos <= qpos
+        if window:
+            valid &= kpos > qpos - window
+        s = jnp.where(valid, s, NEG)
+        new_m = jnp.maximum(m, jnp.max(s, axis=-1))
+        corr = jnp.exp(m - new_m)
+        p = jnp.exp(s - new_m[:, None])
+        l = l * corr + jnp.sum(p, axis=-1)
+        acc = acc * corr[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=F32)
+        return m * 0 + new_m, l, acc
+
+    m0 = jnp.full((G * bq,), NEG, F32)
+    l0 = jnp.zeros((G * bq,), F32)
+    a0 = jnp.zeros((G * bq, hd), F32)
+    m, l, acc = jax.lax.fori_loop(lo, hi, body, (m0, l0, a0))
+    out = acc / jnp.maximum(l, 1e-30)[:, None]
+    o_ref[...] = out.reshape(o_ref.shape).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "cap",
+                                             "bq", "bkv", "interpret"))
+def flash_attention_fwd(q, k, v, *, causal=True, window=0, cap=0.0,
+                        bq=256, bkv=256, interpret=False):
+    """q (B,S,H,hd), k/v (B,T,K,hd) -> (B,S,H,hd). H = K*G."""
+    B, S, H, hd = q.shape
+    T, K = k.shape[1], k.shape[2]
+    G = H // K
+    bq = min(bq, S)
+    bkv = min(bkv, T)
+    assert S % bq == 0 and T % bkv == 0
+    scale = hd ** -0.5
+
+    # layout: fold (B, K) into the grid; q rows (G, bq) fused per tile
+    qr = q.reshape(B, S, K, G, hd).transpose(0, 2, 3, 1, 4) \
+        .reshape(B * K, G, S, hd)
+    kr = k.transpose(0, 2, 1, 3).reshape(B * K, T, hd)
+    vr = v.transpose(0, 2, 1, 3).reshape(B * K, T, hd)
+
+    kernel = functools.partial(_flash_kernel, bq=bq, bkv=bkv, seq_kv=T,
+                               G=G, hd=hd, causal=causal, window=window,
+                               cap=cap, scale=scale)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B * K, S // bq),
+        in_specs=[
+            pl.BlockSpec((1, G, bq, hd), lambda g, i: (g, 0, i, 0)),
+            pl.BlockSpec((1, T, hd), lambda g, i: (g, 0, 0)),
+            pl.BlockSpec((1, T, hd), lambda g, i: (g, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, G, bq, hd), lambda g, i: (g, 0, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * K, G, S, hd), q.dtype),
+        interpret=interpret,
+    )(qr, kr, vr)
+    return out.reshape(B, K, G, S, hd).transpose(0, 3, 1, 2, 4) \
+        .reshape(B, S, H, hd)

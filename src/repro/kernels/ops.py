@@ -1,0 +1,104 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Handle layout (rank-3 activations, padding to block multiples), backend
+dispatch (interpret=True off-TPU so CPU tests execute the kernel body), and
+the weight-quantization caching used by the serving path.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as fa
+from repro.kernels import quant_matmul as qmm
+from repro.kernels import ref
+
+F32 = jnp.float32
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x, m, axis):
+    pad = (-x.shape[axis]) % m
+    if pad == 0:
+        return x, 0
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), pad
+
+
+def quant_matmul(x: jax.Array, w: jax.Array, *, w_bits: int = 8,
+                 a_bits: int = 16, bm: int = 128, bn: int = 128,
+                 bk: int = 256) -> jax.Array:
+    """Drop-in einsum('...d,df->...f') replacement with on-the-fly weight
+    quantization — the HAQ `dot` hook's kernel path. For a real deployment
+    the weights are quantized once via `prepare_quantized` below."""
+    lead = x.shape[:-1]
+    K = x.shape[-1]
+    N = w.shape[-1]
+    x2 = x.reshape(-1, K)
+    x2, pm = _pad_to(x2, bm if x2.shape[0] >= bm else 8, 0)
+    bm_eff = min(bm, x2.shape[0])
+    interp = _interpret()
+    if w_bits <= 4:
+        packed, scale = ref.quantize_w4_packed(w)
+        out = qmm.quant_matmul_w4a16(x2, packed, scale, bm=bm_eff, bn=bn,
+                                     bk=bk, interpret=interp)
+    elif a_bits <= 8:
+        wq, ws = ref.quantize_w8(w)
+        xq, xs = ref.quantize_a8(x2)
+        out = qmm.quant_matmul_w8a8(xq, xs, wq, ws, bm=bm_eff, bn=bn,
+                                    bk=bk, out_dtype=x.dtype,
+                                    interpret=interp)
+    else:
+        wq, ws = ref.quantize_w8(w)
+        out = qmm.quant_matmul_w8a16(x2, wq, ws, bm=bm_eff, bn=bn, bk=bk,
+                                     interpret=interp)
+    if pm:
+        out = out[:-pm]
+    return out.reshape(*lead, N)
+
+
+def prepare_quantized(w: jax.Array, w_bits: int) -> Dict[str, jax.Array]:
+    """One-time weight quantization for serving (stored int side tables)."""
+    if w_bits <= 4:
+        packed, scale = ref.quantize_w4_packed(w)
+        return {"q": packed, "scale": scale, "bits": jnp.asarray(4)}
+    q, scale = ref.quantize_w8(w)
+    return {"q": q, "scale": scale, "bits": jnp.asarray(8)}
+
+
+def quant_matmul_prepared(x: jax.Array, qw: Dict[str, jax.Array],
+                          *, a_bits: int = 16) -> jax.Array:
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    x2, pm = _pad_to(x2, 8, 0)
+    interp = _interpret()
+    bm = min(128, x2.shape[0])
+    if int(qw["bits"]) <= 4:
+        out = qmm.quant_matmul_w4a16(x2, qw["q"], qw["scale"], bm=bm,
+                                     interpret=interp)
+    elif a_bits <= 8:
+        xq, xs = ref.quantize_a8(x2)
+        out = qmm.quant_matmul_w8a8(xq, xs, qw["q"], qw["scale"],
+                                    bm=bm, out_dtype=x.dtype,
+                                    interpret=interp)
+    else:
+        out = qmm.quant_matmul_w8a16(x2, qw["q"], qw["scale"], bm=bm,
+                                     interpret=interp)
+    if pm:
+        out = out[:-pm]
+    return out.reshape(*lead, -1)
+
+
+def flash_attention(q, k, v, *, causal=True, window=0, cap=0.0,
+                    bq=256, bkv=256) -> jax.Array:
+    """Pallas flash attention forward (serving path)."""
+    return fa.flash_attention_fwd(q, k, v, causal=causal, window=window,
+                                  cap=cap, bq=bq, bkv=bkv,
+                                  interpret=_interpret())

@@ -1,0 +1,97 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets).
+
+These define the semantics; the kernels must match them on every
+shape/dtype sweep in tests/test_kernels_*.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+# --------------------------------------------------------- quant matmul ----
+def quantize_w8(w: jax.Array):
+    """Per-output-channel symmetric int8. Returns (q int8 (K,N), scale (N,))."""
+    amax = jnp.max(jnp.abs(w.astype(F32)), axis=0)
+    scale = amax / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(w.astype(F32) / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(F32)
+
+
+def quantize_w4_packed(w: jax.Array):
+    """Per-channel symmetric int4, two values packed per int8 along K.
+    Returns (packed int8 (K//2, N), scale (N,))."""
+    K = w.shape[0]
+    assert K % 2 == 0, K
+    amax = jnp.max(jnp.abs(w.astype(F32)), axis=0)
+    scale = amax / 7.0 + 1e-12
+    q = jnp.clip(jnp.round(w.astype(F32) / scale), -7, 7).astype(jnp.int8)
+    lo = q[0::2] & 0x0F
+    hi = (q[1::2] & 0x0F) << 4
+    return (lo | hi).astype(jnp.int8), scale.astype(F32)
+
+
+def unpack_w4(packed: jax.Array) -> jax.Array:
+    """Inverse of the int4 packing: (K//2, N) int8 -> (K, N) int8 in [-7,7]."""
+    lo = packed.astype(jnp.int8) << 4
+    lo = lo >> 4                     # arithmetic shift sign-extends
+    hi = packed.astype(jnp.int8) >> 4
+    K2, N = packed.shape
+    out = jnp.zeros((K2 * 2, N), jnp.int8)
+    out = out.at[0::2].set(lo)
+    out = out.at[1::2].set(hi)
+    return out
+
+
+def quantize_a8(x: jax.Array):
+    """Per-tensor symmetric int8 activations. Returns (q int8, scale ())."""
+    amax = jnp.max(jnp.abs(x.astype(F32))) + 1e-12
+    scale = amax / 127.0
+    q = jnp.clip(jnp.round(x.astype(F32) / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(F32)
+
+
+def quant_matmul_w8a16(x: jax.Array, w_q: jax.Array, scale: jax.Array):
+    """x (M,K) bf16/f32, w_q (K,N) int8, scale (N,) -> (M,N) x.dtype."""
+    out = jnp.einsum("mk,kn->mn", x.astype(F32), w_q.astype(F32))
+    return (out * scale[None, :]).astype(x.dtype)
+
+
+def quant_matmul_w4a16(x: jax.Array, packed: jax.Array, scale: jax.Array):
+    return quant_matmul_w8a16(x, unpack_w4(packed), scale)
+
+
+def quant_matmul_w8a8(x_q: jax.Array, x_scale: jax.Array, w_q: jax.Array,
+                      w_scale: jax.Array, out_dtype=jnp.bfloat16):
+    """int8 x int8 -> int32 accumulate -> rescale (the int8 MXU path)."""
+    acc = jnp.einsum("mk,kn->mn", x_q.astype(jnp.int32),
+                     w_q.astype(jnp.int32))
+    return (acc.astype(F32) * x_scale * w_scale[None, :]).astype(out_dtype)
+
+
+# ------------------------------------------------------ flash attention ----
+def flash_attention_ref(q, k, v, *, causal=True, window=0, cap=0.0):
+    """Dense attention oracle. q (B,S,H,hd), k/v (B,T,K,hd) GQA."""
+    B, S, H, hd = q.shape
+    T, K = k.shape[1], k.shape[2]
+    G = H // K
+    if G > 1:
+        k = jnp.repeat(k, G, axis=2)
+        v = jnp.repeat(v, G, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(F32), k.astype(F32))
+    s = s * (hd ** -0.5)
+    if cap:
+        s = cap * jnp.tanh(s / cap)
+    i = jnp.arange(S)[:, None]
+    j = jnp.arange(T)[None, :]
+    mask = jnp.ones((S, T), bool)
+    if causal:
+        mask &= j <= i
+    if window:
+        mask &= j > i - window
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(F32))
+    return out.astype(q.dtype)

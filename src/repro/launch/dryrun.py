@@ -1,0 +1,255 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST be the first two lines: jax locks device count on first init.
+"""Multi-pod dry-run: lower + compile every (arch x shape) on the production
+meshes, record memory_analysis / cost_analysis / collective schedule, and
+derive the three-term roofline (repro.roofline.analysis).
+
+Usage:
+  python -m repro.launch.dryrun --arch granite-3-8b --shape train_4k
+  python -m repro.launch.dryrun --all --mesh both
+Results are cached to artifacts/dryrun/<arch>__<shape>__<mesh>.json; pass
+--force to recompute a cell.
+"""
+import argparse
+import gc
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from repro.configs import (ARCHS, SHAPES, TrainConfig, OptimConfig,
+                           assigned_cells, get_config, get_shape)
+from repro.distributed import sharding as shlib
+from repro.launch.mesh import make_production_mesh
+from repro.models.api import build_model
+from repro.roofline import analysis as ra
+from repro.training import steps as steps_lib
+
+ART = Path(__file__).resolve().parents[3] / "artifacts" / "dryrun"
+
+# archs whose optimizer state only fits 16GiB/chip with int8 Adam moments
+QUANT_MOMENT_ARCHS = {"llama4-maverick-400b-a17b", "mistral-large-123b"}
+
+
+def train_cfg_for(arch: str, microbatches: int = 1) -> TrainConfig:
+    return TrainConfig(optim=OptimConfig(
+        quantized_moments=arch in QUANT_MOMENT_ARCHS),
+        microbatches=microbatches)
+
+
+def quant_policy_for(cfg, mode: str):
+    """HAQ-style decode policy via the paper's budget back-off (§4) on the
+    TPU hardware model — deterministic stand-in for the trained agent."""
+    from repro.core import haq
+    from repro.core.hardware_model import V5E_POD
+    if mode == "w8":
+        return None, 8
+    if mode == "w4":
+        return None, 4
+    sites = haq.enumerate_sites(cfg, batch=128, seq=1, decode=True)
+    wa = [(8, 16)] * len(sites)
+    budget = 0.55 * haq.resource(sites, wa, V5E_POD, "latency")
+    wa = haq.enforce_budget(sites, wa, V5E_POD, budget, "latency")
+    return {s.name: w for s, (w, a) in zip(sites, wa)}, 8
+
+
+def build_step(model, shape, mesh, tcfg, quant: str = "", ac_mode: str = "dp"):
+    """Returns (fn, args_abstract, in_shardings, out_shardings, donate)."""
+    from repro.models.params import abstract_params, logical_specs
+    from repro.serving import quant as sq
+
+    ac = shlib.make_ac(mesh, mode=ac_mode)
+    cfg = model.cfg
+    dot = None
+    p_abstract = model.abstract_params()
+    p_logical = model.logical_specs()
+    weight_bits = 16.0
+    if quant and shape.kind != "train":
+        policy, default_bits = quant_policy_for(cfg, quant)
+        defs_q = sq.quantize_defs(model.defs, policy=policy,
+                                  default_bits=default_bits)
+        p_abstract = abstract_params(defs_q)
+        p_logical = logical_specs(defs_q)
+        dot = sq.dequant_dot
+        weight_bits = sq.avg_weight_bits(defs_q)
+    pspecs = shlib.specs_for(p_abstract, p_logical, mesh)
+    if shape.kind == "train":
+        step = steps_lib.make_train_step(model, tcfg, ac=ac)
+        state = steps_lib.abstract_train_state(model, tcfg)
+        sspecs = shlib.specs_for(
+            state, steps_lib.train_state_logical_specs(model, tcfg), mesh)
+        batch = model.input_specs(shape)
+        bspecs = shlib.specs_for(batch, model.batch_logical_specs(shape), mesh)
+        scal = shlib.scalar_sharding(mesh)
+        metrics = {"loss": scal, "lr": scal, "grad_norm": scal}
+        return (step, (state, batch), (sspecs, bspecs), (sspecs, metrics),
+                (0,), weight_bits)
+    if shape.kind == "prefill":
+        step = steps_lib.make_prefill_step(model, ac=ac, dot=dot)
+        batch = model.input_specs(shape)
+        bspecs = shlib.specs_for(batch, model.batch_logical_specs(shape), mesh)
+        cache_ax = model.batch_logical_specs(
+            SHAPES["decode_32k"])["cache"]
+        cspecs = shlib.specs_for(model.cache_specs(shape.global_batch,
+                                                   shape.seq_len),
+                                 cache_ax, mesh)
+        return (step, (p_abstract, batch), (pspecs, bspecs), (None, cspecs),
+                (), weight_bits)
+    # decode
+    step = steps_lib.make_serve_step(model, ac=ac, dot=dot)
+    ins = model.input_specs(shape)
+    inspecs = shlib.specs_for(ins, model.batch_logical_specs(shape), mesh)
+    return (step,
+            (p_abstract, ins["cache"], ins["token"], ins["pos"]),
+            (pspecs, inspecs["cache"], inspecs["token"], inspecs["pos"]),
+            (None, inspecs["cache"]),
+            (1,), weight_bits)
+
+
+def sharded_bytes_per_device(abstract, shardings) -> int:
+    """Exact persistent per-device bytes for a (state/cache) pytree under its
+    NamedShardings — the number that decides HBM fit on real v5e chips. The
+    compiled CPU memory_analysis over-reports bf16 buffers (XLA:CPU legalizes
+    bf16 compute to f32) — see EXPERIMENTS.md §Dry-run."""
+    total = 0
+    for a, s in zip(jax.tree.leaves(abstract), jax.tree.leaves(
+            shardings, is_leaf=lambda x: hasattr(x, "shard_shape"))):
+        local = s.shard_shape(a.shape)
+        n = 1
+        for d in local:
+            n *= d
+        total += n * a.dtype.itemsize
+    return total
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, *, save_hlo=False,
+             out_dir: Path = ART, tag: str = "", quant: str = "",
+             microbatches: int = 1, ac_mode: str = "dp") -> dict:
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    multi = mesh_kind == "multi"
+    mesh = make_production_mesh(multi_pod=multi)
+    chips = 512 if multi else 256
+    model = build_model(cfg)
+    tcfg = train_cfg_for(arch, microbatches)
+
+    t0 = time.time()
+    step, args, in_sh, out_sh, donate, weight_bits = build_step(
+        model, shape, mesh, tcfg, quant=quant, ac_mode=ac_mode)
+    state_bytes = sharded_bytes_per_device(args[0], in_sh[0])
+    if shape.kind == "decode":  # + cache
+        state_bytes += sharded_bytes_per_device(args[1], in_sh[1])
+    with mesh:
+        lowered = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh,
+                          donate_argnums=donate).lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    ma = compiled.memory_analysis()
+    hlo = compiled.as_text()
+    roof = ra.analyze_hlo_aware(
+        hlo, chips, cfg, shape, weight_bits=weight_bits,
+        quantized_moments=tcfg.optim.quantized_moments)
+    roof_raw = ra.analyze(compiled, chips, cfg, shape, hlo_text=hlo)
+    coll = ra.collective_bytes(hlo)
+    mem = {
+        "argument_bytes": getattr(ma, "argument_size_in_bytes", None),
+        "output_bytes": getattr(ma, "output_size_in_bytes", None),
+        "temp_bytes": getattr(ma, "temp_size_in_bytes", None),
+        "alias_bytes": getattr(ma, "alias_size_in_bytes", None),
+        "code_bytes": getattr(ma, "generated_code_size_in_bytes", None),
+    }
+    live = (mem["argument_bytes"] or 0) + (mem["temp_bytes"] or 0) \
+        - (mem["alias_bytes"] or 0)
+    rec = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+        "chips": chips,
+        "params": model.param_count(),
+        "active_params": ra.active_params(cfg),
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "memory": mem,
+        "live_bytes_per_device": live,
+        "state_bytes_per_device": state_bytes,
+        "fits_16GiB": bool(live <= ra.HBM_GB * (1 << 30)),
+        "state_fits_16GiB": bool(state_bytes <= ra.HBM_GB * (1 << 30)),
+        "collectives_per_device": {k: v for k, v in coll.items() if v},
+        "roofline": roof.to_dict(),
+        "roofline_raw_xla": roof_raw.to_dict(),
+        "hlo_chars": len(hlo),
+    }
+    out_dir.mkdir(parents=True, exist_ok=True)
+    name = f"{arch}__{shape_name}__{mesh_kind}{tag}"
+    (out_dir / f"{name}.json").write_text(json.dumps(rec, indent=1))
+    if save_hlo:
+        (out_dir / f"{name}.hlo.txt").write_text(hlo)
+    del compiled, lowered, hlo
+    gc.collect()
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--quant", default="", choices=["", "w8", "w4", "haq"],
+                    help="quantized-weight serving (prefill/decode cells)")
+    ap.add_argument("--microbatches", type=int, default=1,
+                    help="gradient accumulation for train cells")
+    ap.add_argument("--ac-mode", default="dp", choices=["dp", "seq_tp"],
+                    help="activation sharding: dp | seq_tp (sequence-parallel TP)")
+    args = ap.parse_args()
+
+    cells = assigned_cells() if args.all else [(args.arch, args.shape)]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    failures = []
+    for arch, shape in cells:
+        for mesh_kind in meshes:
+            name = f"{arch}__{shape}__{mesh_kind}{args.tag}"
+            path = ART / f"{name}.json"
+            if path.exists() and not args.force:
+                rec = json.loads(path.read_text())
+                print(f"[cached] {name}: {rec['roofline']['bottleneck']}-bound"
+                      f" live={rec['live_bytes_per_device']/2**30:.2f}GiB")
+                continue
+            try:
+                t0 = time.time()
+                rec = run_cell(arch, shape, mesh_kind,
+                               save_hlo=args.save_hlo, tag=args.tag,
+                               quant=args.quant,
+                               microbatches=args.microbatches,
+                               ac_mode=args.ac_mode)
+                r = rec["roofline"]
+                print(f"[ok {time.time()-t0:6.1f}s] {name}: "
+                      f"comp={r['t_compute_s']:.4f}s "
+                      f"mem={r['t_memory_s']:.4f}s "
+                      f"coll={r['t_collective_s']:.4f}s "
+                      f"{r['bottleneck']}-bound "
+                      f"live={rec['live_bytes_per_device']/2**30:.2f}GiB "
+                      f"state={rec['state_bytes_per_device']/2**30:.2f}GiB "
+                      f"fits={rec['fits_16GiB']}", flush=True)
+            except Exception as e:  # noqa: BLE001 — report and continue
+                failures.append((name, repr(e)))
+                print(f"[FAIL] {name}: {e!r}", flush=True)
+                traceback.print_exc()
+            jax.clear_caches()
+            gc.collect()
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for n, e in failures:
+            print(" ", n, e)
+        raise SystemExit(1)
+    print("\nall requested dry-run cells passed")
+
+
+if __name__ == "__main__":
+    main()

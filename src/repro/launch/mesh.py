@@ -1,0 +1,24 @@
+"""Production mesh construction.
+
+A function, not a module-level constant: importing this module must never
+touch jax device state (the dry-run sets XLA_FLAGS before any jax import).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(model: int = 1):
+    """Whatever-devices-exist mesh for CPU smoke tests / examples."""
+    n = jax.device_count()
+    assert n % model == 0, (n, model)
+    return jax.make_mesh((n // model, model), ("data", "model"),
+                         axis_types=(AxisType.Auto, AxisType.Auto))

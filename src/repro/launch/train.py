@@ -1,0 +1,64 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [...]``.
+
+On the CPU container this trains tiny/reduced configs end-to-end (see
+examples/train_lm.py for the ~100M run); on a real pod the same entry point
+drives the production mesh — the mesh/sharding logic is shared with the
+dry-run, so what compiles there runs here.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs import (OptimConfig, TrainConfig, get_config, get_shape,
+                           tiny_config, SHAPES)
+from repro.configs.base import ShapeConfig
+from repro.data.pipeline import DataConfig
+from repro.models.api import build_model
+from repro.training.loop import train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--tiny", action="store_true",
+                    help="reduced same-family config (CPU-sized)")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=0)
+    ap.add_argument("--seq", type=int, default=0)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=20)
+    args = ap.parse_args()
+
+    cfg = tiny_config(args.arch) if args.tiny else get_config(args.arch)
+    shape = get_shape(args.shape)
+    if args.batch or args.seq:
+        shape = ShapeConfig(shape.name, args.seq or shape.seq_len,
+                            args.batch or shape.global_batch, shape.kind)
+    model = build_model(cfg)
+    tcfg = TrainConfig(
+        optim=OptimConfig(lr=args.lr, total_steps=args.steps,
+                          warmup_steps=max(args.steps // 10, 1)),
+        checkpoint_dir=f"{args.ckpt_dir}/{cfg.name}",
+        checkpoint_every=args.ckpt_every,
+        microbatches=args.microbatches,
+        log_every=5,
+    )
+    print(f"training {cfg.name}: {model.param_count():,} params, "
+          f"shape=({shape.global_batch}x{shape.seq_len}), "
+          f"devices={jax.device_count()}")
+    out = train(model, shape, tcfg, num_steps=args.steps,
+                dcfg=DataConfig(cfg.vocab_size, shape.seq_len,
+                                shape.global_batch))
+    first, last = out["history"][0], out["history"][-1]
+    print(f"loss {first['loss']} -> {last['loss']} over "
+          f"{args.steps} steps; straggler events: "
+          f"{len(out['straggler_events'])}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,185 @@
+"""Whisper-style encoder-decoder backbone.
+
+The conv/audio frontend is a STUB per the assignment: the input batch carries
+precomputed frame embeddings ``frames (B, S_enc, d_model)``. Positions are
+sinusoidal (no RoPE, cfg.rope_theta == 0). num_layers applies to both stacks;
+decoder length = seq_len // cfg.dec_ratio.
+
+Decode caches: per decoder layer a growing self-attn KV cache plus a static
+cross-attn KV computed once from the encoder output at prefill.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models.layers import ffn_apply, ffn_defs, norm_def, rms_norm
+from repro.models.params import PDef, stacked
+from repro.models.transformer import embed_tokens, unembed, _identity_ac
+
+F32 = jnp.float32
+
+
+def sinusoidal(S: int, d: int) -> jax.Array:
+    pos = jnp.arange(S, dtype=F32)[:, None]
+    dim = jnp.arange(d // 2, dtype=F32)[None, :]
+    inv = jnp.exp(-math.log(10000.0) * dim / max(d // 2 - 1, 1))
+    ang = pos * inv
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def _enc_layer_defs(cfg):
+    d = cfg.d_model
+    return {
+        "ln1": norm_def(d),
+        "attn": attn.attn_defs(d, cfg.num_heads, cfg.num_kv_heads,
+                               cfg.resolved_head_dim),
+        "ln2": norm_def(d),
+        "ffn": ffn_defs(d, cfg.d_ff, cfg.activation),
+    }
+
+
+def _dec_layer_defs(cfg):
+    d = cfg.d_model
+    return {
+        **_enc_layer_defs(cfg),
+        "ln_x": norm_def(d),
+        "xattn": attn.attn_defs(d, cfg.num_heads, cfg.num_kv_heads,
+                                cfg.resolved_head_dim),
+    }
+
+
+def param_defs(cfg) -> dict:
+    d = cfg.d_model
+    return {
+        "embed": PDef((cfg.padded_vocab, d), ("vocab", "embed"), "normal"),
+        "enc": stacked({"l": _enc_layer_defs(cfg)}, cfg.num_layers)["l"],
+        "dec": stacked({"l": _dec_layer_defs(cfg)}, cfg.num_layers)["l"],
+        "enc_norm": norm_def(d),
+        "final_norm": norm_def(d),
+        "lm_head": PDef((d, cfg.padded_vocab), ("embed", "vocab"), "scaled"),
+    }
+
+
+def encode(params, frames, cfg, *, remat=False, ac=_identity_ac, dot=None):
+    B, S, D = frames.shape
+    x = frames.astype(jnp.bfloat16) + sinusoidal(S, D).astype(jnp.bfloat16)
+    x = ac(x, "resid")
+
+    def body(h, p):
+        a, _ = attn.attention_fwd(p["attn"], rms_norm(h, p["ln1"],
+                                                      cfg.norm_eps),
+                                  "bidir", cfg, None, dot=dot)
+        h = ac(h + a, "resid")
+        f = ffn_apply(p["ffn"], rms_norm(h, p["ln2"], cfg.norm_eps),
+                      cfg.activation, dot=dot)
+        return ac(h + f, "resid"), None
+
+    body = jax.checkpoint(body) if remat else body
+    x, _ = jax.lax.scan(body, x, params["enc"])
+    return rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def decode_fwd(params, mem, tokens, cfg, *, want_cache: bool, remat=False,
+               ac=_identity_ac, dot=None, unembed_mode: str = "full"):
+    """Teacher-forced decoder pass. Returns (logits, caches|None)."""
+    B, S = tokens.shape
+    x = embed_tokens(params, tokens, cfg)
+    x = x + sinusoidal(S, cfg.d_model).astype(x.dtype)
+    x = ac(x, "resid")
+
+    def body(h, p):
+        a, sc = attn.attention_fwd(p["attn"], rms_norm(h, p["ln1"],
+                                                       cfg.norm_eps),
+                                   "global", cfg, None, dot=dot)
+        h = ac(h + a, "resid")
+        mk, mv = attn.cross_kv(p["xattn"], mem, dot=dot)
+        c = attn.cross_attention(p["xattn"], rms_norm(h, p["ln_x"],
+                                                      cfg.norm_eps),
+                                 mk, mv, cfg, dot=dot)
+        h = ac(h + c, "resid")
+        f = ffn_apply(p["ffn"], rms_norm(h, p["ln2"], cfg.norm_eps),
+                      cfg.activation, dot=dot)
+        h = ac(h + f, "resid")
+        out = {"k": sc["k"], "v": sc["v"], "mk": mk, "mv": mv} \
+            if want_cache else None
+        return h, out
+
+    body = jax.checkpoint(body) if remat else body
+    x, caches = jax.lax.scan(body, x, params["dec"])
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if unembed_mode == "none":
+        return x, caches
+    if unembed_mode == "last":
+        x = x[:, -1:]
+    return unembed(params, x, cfg, dot=dot), caches
+
+
+def forward(params, batch, cfg, *, want_cache: bool, remat=False,
+            ac=_identity_ac, dot=None, unembed_mode: str = "full"):
+    """batch: {frames (B,S,D), tokens (B,S_dec)}. Matches transformer.forward
+    signature: returns (logits, caches, aux, loss_mask)."""
+    mem = encode(params, batch["frames"], cfg, remat=remat, ac=ac, dot=dot)
+    logits, caches = decode_fwd(params, mem, batch["tokens"], cfg,
+                                want_cache=want_cache, remat=remat, ac=ac,
+                                dot=dot, unembed_mode=unembed_mode)
+    return logits, caches, jnp.zeros((), F32), None
+
+
+def decode_step(params, cache, token, pos, cfg, *, ac=_identity_ac, dot=None):
+    """One decoder token. cache: {k,v (L,B,Sd,K,hd), mk,mv (L,B,Se,K,hd)}."""
+    x = embed_tokens(params, token, cfg)
+    d = cfg.d_model
+    pe = sinusoidal_at(pos, d).astype(x.dtype)
+    x = x + pe[None, None, :]
+
+    def body(h, xs):
+        p, c = xs
+        a, ck, cv = attn.attention_decode(
+            p["attn"], rms_norm(h, p["ln1"], cfg.norm_eps), c["k"], c["v"],
+            pos, "global", cfg, dot=dot)
+        h = h + a
+        cx = attn.cross_attention(p["xattn"], rms_norm(h, p["ln_x"],
+                                                       cfg.norm_eps),
+                                  c["mk"], c["mv"], cfg, dot=dot)
+        h = h + cx
+        f = ffn_apply(p["ffn"], rms_norm(h, p["ln2"], cfg.norm_eps),
+                      cfg.activation, dot=dot)
+        return h + f, {"k": ck, "v": cv, "mk": c["mk"], "mv": c["mv"]}
+
+    x, new_cache = jax.lax.scan(body, x, (params["dec"], cache))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return unembed(params, x, cfg, dot=dot), new_cache
+
+
+def sinusoidal_at(pos, d: int) -> jax.Array:
+    dim = jnp.arange(d // 2, dtype=F32)
+    inv = jnp.exp(-math.log(10000.0) * dim / max(d // 2 - 1, 1))
+    ang = pos.astype(F32) * inv
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def cache_specs(cfg, batch: int, seq_len: int):
+    hd = cfg.resolved_head_dim
+    K = cfg.num_kv_heads
+    L = cfg.num_layers
+    S_dec = max(seq_len // cfg.dec_ratio, 1)
+
+    def sd(*shape):
+        return jax.ShapeDtypeStruct(shape, jnp.bfloat16)
+
+    return {
+        "k": sd(L, batch, S_dec, K, hd),
+        "v": sd(L, batch, S_dec, K, hd),
+        "mk": sd(L, batch, seq_len, K, hd),
+        "mv": sd(L, batch, seq_len, K, hd),
+    }
+
+
+def cache_axes(cfg):
+    ax = ("layer", "batch", "cache_seq", "kv_heads", "head_dim")
+    return {"k": ax, "v": ax, "mk": ax, "mv": ax}

@@ -1,0 +1,221 @@
+"""Blockwise (flash-style) attention in pure XLA with a custom VJP.
+
+Used for every sequence long enough that materializing (S, T) score matrices
+is infeasible (threshold FLASH_MIN). Forward is the classic online-softmax
+over KV blocks; backward recomputes scores blockwise (two double-scans: one
+for dq, one for dk/dv), so live memory stays O(S·d) instead of O(S²).
+
+GQA is handled by repeating KV blocks to the full head count *inside* a
+block — the (K, G) reshape would break head sharding whenever TP > K (e.g.
+gemma2's 4 KV heads on a 16-way model axis); repeated blocks keep the heads
+axis cleanly sharded and the cache stays K-headed.
+
+This is the XLA twin of the Pallas kernel in repro/kernels/flash_attention.py
+(same blocking, same math); the Pallas version is the TPU target, this one is
+what the multi-pod dry-run lowers. Masked blocks are still computed (2×
+causal waste) — see EXPERIMENTS.md §Perf for the measured impact and the
+kernel-side fix.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+NEG = -1e30
+FLASH_MIN = 2048          # use flash above this q-length
+DEFAULT_BLOCK_Q = 512
+DEFAULT_BLOCK_KV = 512
+
+
+def _block_mask(i, j, Qc: int, Kc: int, kind: str, window: int):
+    """(Qc, Kc) bool mask for q-block i vs kv-block j."""
+    qpos = i * Qc + jnp.arange(Qc)[:, None]
+    kpos = j * Kc + jnp.arange(Kc)[None, :]
+    if kind == "bidir":
+        return jnp.ones((Qc, Kc), bool)
+    m = kpos <= qpos
+    if kind == "local":
+        m &= kpos > qpos - window
+    return m
+
+
+def _scores(qb, kb, scale: float, cap: float):
+    """qb (B,Qc,H,hd) kb (B,Kc,H,hd) -> (B,H,Qc,Kc) fp32 (softcapped)."""
+    s = jnp.einsum("bqhd,bkhd->bhqk", qb.astype(F32), kb.astype(F32)) * scale
+    if cap:
+        s = cap * jnp.tanh(s / cap)
+    return s
+
+
+def _rep(k, G):
+    return jnp.repeat(k, G, axis=2) if G > 1 else k
+
+
+def _fwd_impl(q, k, v, kind: str, window: int, cap: float,
+              block_q: int, block_kv: int):
+    B, S, H, hd = q.shape
+    T, K = k.shape[1], k.shape[2]
+    G = H // K
+    scale = hd ** -0.5
+    Qc = min(block_q, S)
+    Kc = min(block_kv, T)
+    assert S % Qc == 0 and T % Kc == 0, (S, T, Qc, Kc)
+    nq, nk = S // Qc, T // Kc
+
+    qb = jnp.moveaxis(q.reshape(B, nq, Qc, H, hd), 1, 0)
+
+    # NOTE: block indices i/j are threaded through the scan CARRY (not iota
+    # xs): XLA's while-loop invariant code motion otherwise precomputes the
+    # (i, j)-dependent masks for every iteration as one giant stacked pred
+    # tensor (observed 2 GiB/device on the CPU dry-run backend).
+    def q_body(i, qi):
+        def kv_body(carry, _):
+            m, l, acc, j = carry
+            kj = _rep(jax.lax.dynamic_slice_in_dim(k, j * Kc, Kc, 1), G)
+            vj = _rep(jax.lax.dynamic_slice_in_dim(v, j * Kc, Kc, 1), G)
+            s = _scores(qi, kj, scale, cap)                  # (B,H,Qc,Kc)
+            s = jnp.where(_block_mask(i, j, Qc, Kc, kind, window)
+                          [None, None], s, NEG)
+            new_m = jnp.maximum(m, jnp.max(s, axis=-1))
+            corr = jnp.exp(m - new_m)
+            p = jnp.exp(s - new_m[..., None])
+            l = l * corr + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bhqk,bkhd->bhqd", p, vj.astype(F32))
+            acc = acc * corr[..., None] + pv
+            return (new_m, l, acc, j + 1), None
+
+        m0 = jnp.full((B, H, Qc), NEG, F32)
+        l0 = jnp.zeros((B, H, Qc), F32)
+        a0 = jnp.zeros((B, H, Qc, hd), F32)
+        (m, l, acc, _), _ = jax.lax.scan(
+            kv_body, (m0, l0, a0, jnp.zeros((), jnp.int32)), None, length=nk)
+        out_i = acc / jnp.maximum(l, 1e-30)[..., None]       # (B,H,Qc,hd)
+        lse_i = m + jnp.log(jnp.maximum(l, 1e-30))           # (B,H,Qc)
+        return i + 1, (out_i, lse_i)
+
+    _, (ob, lse_b) = jax.lax.scan(q_body, jnp.zeros((), jnp.int32), qb)
+    out = jnp.moveaxis(ob, 0, 2).reshape(B, H, S, hd)        # (B,H,S,hd)
+    out = jnp.moveaxis(out, 1, 2).astype(q.dtype)            # (B,S,H,hd)
+    lse = jnp.moveaxis(lse_b, 0, 2).reshape(B, H, S)
+    return out, lse
+
+
+@functools.lru_cache(maxsize=None)
+def _make_flash(kind: str, window: int, cap: float, block_q: int,
+                block_kv: int):
+    """custom_vjp closure over the static attention config. Static values are
+    captured by closure (not nondiff_argnums): with nondiff_argnums, scan
+    partial-eval was observed to stage the fwd impl's internal residuals
+    (stacked block masks) instead of treating the call as opaque."""
+
+    @jax.custom_vjp
+    def attn(q, k, v):
+        out, _ = _fwd_impl(q, k, v, kind, window, cap, block_q, block_kv)
+        return out
+
+    def fwd_rule(q, k, v):
+        out, lse = _fwd_impl(q, k, v, kind, window, cap, block_q, block_kv)
+        return out, (q, k, v, out, lse)
+
+    def bwd_rule(res, dout):
+        return _bwd_impl(kind, window, cap, block_q, block_kv, res, dout)
+
+    attn.defvjp(fwd_rule, bwd_rule)
+    return attn
+
+
+def flash_attention(q, k, v, kind: str = "global", window: int = 0,
+                    cap: float = 0.0, block_q: int = DEFAULT_BLOCK_Q,
+                    block_kv: int = DEFAULT_BLOCK_KV):
+    return _make_flash(kind, int(window), float(cap), int(block_q),
+                       int(block_kv))(q, k, v)
+
+
+def _bwd_impl(kind, window, cap, block_q, block_kv, res, dout):
+    q, k, v, out, lse = res
+    B, S, H, hd = q.shape
+    T, K = k.shape[1], k.shape[2]
+    G = H // K
+    scale = hd ** -0.5
+    Qc = min(block_q, S)
+    Kc = min(block_kv, T)
+    nq, nk = S // Qc, T // Kc
+
+    doutf = dout.astype(F32)
+    delta = jnp.einsum("bshd,bshd->bhs", doutf, out.astype(F32))  # (B,H,S)
+
+    qb = jnp.moveaxis(q.reshape(B, nq, Qc, H, hd), 1, 0)
+    dob = jnp.moveaxis(doutf.reshape(B, nq, Qc, H, hd), 1, 0)
+    lseb = jnp.moveaxis(lse.reshape(B, H, nq, Qc), 2, 0)          # (nq,B,H,Qc)
+    deltab = jnp.moveaxis(delta.reshape(B, H, nq, Qc), 2, 0)
+
+    def _p_and_ds(qi, kj, lse_i, delta_i, do_i, vj, i, j):
+        """Recompute P_ij and dS_ij (pre-scale, pre-softcap-chain)."""
+        raw = jnp.einsum("bqhd,bkhd->bhqk", qi.astype(F32),
+                         kj.astype(F32)) * scale
+        s = cap * jnp.tanh(raw / cap) if cap else raw
+        s = jnp.where(_block_mask(i, j, Qc, Kc, kind, window)[None, None],
+                      s, NEG)
+        p = jnp.exp(s - lse_i[..., None])                         # normalized
+        dp = jnp.einsum("bqhd,bkhd->bhqk", do_i, vj.astype(F32))
+        ds = p * (dp - delta_i[..., None])
+        if cap:
+            ds = ds * (1.0 - jnp.square(jnp.tanh(raw / cap)))
+        return p, ds
+
+    # ---- pass 1: dq (outer q blocks, inner kv blocks); indices in carries
+    def dq_body(i, xs):
+        qi, do_i, lse_i, delta_i = xs
+
+        def inner(carry, _):
+            dq_acc, j = carry
+            kj = _rep(jax.lax.dynamic_slice_in_dim(k, j * Kc, Kc, 1), G)
+            vj = _rep(jax.lax.dynamic_slice_in_dim(v, j * Kc, Kc, 1), G)
+            _, ds = _p_and_ds(qi, kj, lse_i, delta_i, do_i, vj, i, j)
+            dq_acc = dq_acc + jnp.einsum("bhqk,bkhd->bqhd", ds,
+                                         kj.astype(F32)) * scale
+            return (dq_acc, j + 1), None
+
+        dq0 = jnp.zeros((B, Qc, H, hd), F32)
+        (dq_i, _), _ = jax.lax.scan(inner, (dq0, jnp.zeros((), jnp.int32)),
+                                    None, length=nk)
+        return i + 1, dq_i
+
+    _, dqb = jax.lax.scan(dq_body, jnp.zeros((), jnp.int32),
+                          (qb, dob, lseb, deltab))
+    dq = jnp.moveaxis(dqb, 0, 1).reshape(B, S, H, hd).astype(q.dtype)
+
+    # ---- pass 2: dk, dv (outer kv blocks, inner q blocks)
+    def dkv_body(j, _):
+        kj = _rep(jax.lax.dynamic_slice_in_dim(k, j * Kc, Kc, 1), G)
+        vj = _rep(jax.lax.dynamic_slice_in_dim(v, j * Kc, Kc, 1), G)
+
+        def inner(carry, xs):
+            dk_acc, dv_acc, i = carry
+            qi, do_i, lse_i, delta_i = xs
+            p, ds = _p_and_ds(qi, kj, lse_i, delta_i, do_i, vj, i, j)
+            dv_acc = dv_acc + jnp.einsum("bhqk,bqhd->bkhd", p, do_i)
+            dk_acc = dk_acc + jnp.einsum("bhqk,bqhd->bkhd", ds,
+                                         qi.astype(F32)) * scale
+            return (dk_acc, dv_acc, i + 1), None
+
+        z = jnp.zeros((B, Kc, H, hd), F32)
+        (dk_j, dv_j, _), _ = jax.lax.scan(
+            inner, (z, z, jnp.zeros((), jnp.int32)),
+            (qb, dob, lseb, deltab))
+        # fold repeated heads back to K kv-heads
+        dk_j = dk_j.reshape(B, Kc, K, G, hd).sum(3)
+        dv_j = dv_j.reshape(B, Kc, K, G, hd).sum(3)
+        return j + 1, (dk_j, dv_j)
+
+    _, (dkb, dvb) = jax.lax.scan(dkv_body, jnp.zeros((), jnp.int32),
+                                 None, length=nk)
+    dk = jnp.moveaxis(dkb, 0, 1).reshape(B, T, K, hd).astype(k.dtype)
+    dv = jnp.moveaxis(dvb, 0, 1).reshape(B, T, K, hd).astype(v.dtype)
+    return dq, dk, dv
+
+

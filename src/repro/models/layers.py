@@ -1,0 +1,104 @@
+"""Shared layer library: norms, RoPE, FFN variants, softcap.
+
+Everything is a pure function of (params, x); computation runs in bf16 with
+fp32 accumulations where numerically required (norm statistics, attention
+logits, router logits).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.params import PDef
+
+F32 = jnp.float32
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(F32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(F32))).astype(dt)
+
+
+def softcap(x: jax.Array, cap: float) -> jax.Array:
+    if not cap:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+# ---------------------------------------------------------------- RoPE ----
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=F32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., seq, heads, head_dim); positions: broadcastable to (..., seq)."""
+    head_dim = x.shape[-1]
+    freqs = rope_freqs(head_dim, theta)                      # (hd/2,)
+    angles = positions.astype(F32)[..., None] * freqs        # (..., seq, hd/2)
+    angles = angles[..., None, :]                            # (..., seq, 1, hd/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(F32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------- FFN ----
+def ffn_defs(d_model: int, d_ff: int, activation: str, ff_axis: str = "d_ff"):
+    gated = activation in ("swiglu", "geglu")
+    defs = {
+        "w_in": PDef((d_model, d_ff), ("embed", ff_axis), "scaled"),
+        "w_out": PDef((d_ff, d_model), (ff_axis, "embed"), "scaled"),
+    }
+    if gated:
+        defs["w_gate"] = PDef((d_model, d_ff), ("embed", ff_axis), "scaled")
+    return defs
+
+
+def _act(h: jax.Array, kind: str) -> jax.Array:
+    if kind in ("swiglu",):
+        return jax.nn.silu(h)
+    if kind in ("geglu", "gelu"):
+        return jax.nn.gelu(h, approximate=True)
+    if kind == "squared_relu":
+        r = jax.nn.relu(h)
+        return r * r
+    raise ValueError(kind)
+
+
+def ffn_apply(p, x: jax.Array, activation: str, *, dot=None) -> jax.Array:
+    """dot: optional (x, w, name) -> y override (HAQ quantized path)."""
+    dot = dot or (lambda a, w, name: jnp.einsum(
+        "...d,df->...f", a, w))
+    h = dot(x, p["w_in"], "ffn_in")
+    if "w_gate" in p:
+        g = dot(x, p["w_gate"], "ffn_gate")
+        h = _act(g, activation) * h
+    else:
+        h = _act(h, activation)
+    return dot(h, p["w_out"], "ffn_out")
+
+
+def embed_defs(vocab: int, d_model: int):
+    return PDef((vocab, d_model), ("vocab", "embed"), "normal")
+
+
+def norm_def(d_model: int):
+    return PDef((d_model,), ("embed",), "zeros", dtype=jnp.float32)
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  mask: Optional[jax.Array] = None) -> jax.Array:
+    """Mean next-token CE. logits (..., V) fp32-accumulated."""
+    logits = logits.astype(F32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        mask = mask.astype(F32)
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

@@ -1,0 +1,91 @@
+"""Parameter-definition DSL.
+
+Every model declares its parameters ONCE as a pytree of ``PDef`` leaves
+(shape + logical axes + init). From that single declaration we derive:
+
+  * ``init_params``     — materialized arrays (CPU smoke tests, examples)
+  * ``abstract_params`` — ShapeDtypeStructs (dry-run lowering, no allocation)
+  * ``logical_specs``   — pytree of logical-axis tuples consumed by
+                          ``repro.distributed.sharding`` to build NamedShardings
+
+Logical axis vocabulary (see distributed/sharding.py for the mesh mapping):
+  layer, vocab, embed, heads, kv_heads, qk_head_dim(=head_dim), d_ff,
+  experts, expert_ff, ssm_inner, ssm_state, conv, batch, seq, null
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class PDef:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: str = "normal"     # normal | zeros | ones | scaled(fan_in)
+    scale: float = 1.0
+    dtype: Any = jnp.bfloat16
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def stacked(defs, n: int):
+    """Prepend a scanned layer dimension to every PDef in a subtree."""
+    def _s(d: PDef) -> PDef:
+        return PDef((n,) + d.shape, ("layer",) + d.axes, d.init, d.scale,
+                    d.dtype)
+    return jax.tree.map(_s, defs, is_leaf=lambda x: isinstance(x, PDef))
+
+
+def _is_pdef(x):
+    return isinstance(x, PDef)
+
+
+def init_params(defs, key, dtype=None):
+    leaves, treedef = jax.tree.flatten(defs, is_leaf=_is_pdef)
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for d, k in zip(leaves, keys):
+        dt = dtype or d.dtype
+        if d.init == "zeros":
+            a = jnp.zeros(d.shape, dt)
+        elif d.init == "ones":
+            a = jnp.ones(d.shape, dt)
+        else:
+            if d.init == "scaled":
+                fan_in = d.shape[-2] if len(d.shape) >= 2 else d.shape[-1]
+                std = d.scale / math.sqrt(max(fan_in, 1))
+            else:
+                std = d.scale * 0.02
+            a = (jax.random.normal(k, d.shape, jnp.float32) * std).astype(dt)
+        out.append(a)
+    return jax.tree.unflatten(treedef, out)
+
+
+def abstract_params(defs, dtype=None):
+    def _a(d: PDef):
+        return jax.ShapeDtypeStruct(d.shape, dtype or d.dtype)
+    return jax.tree.map(_a, defs, is_leaf=_is_pdef)
+
+
+def logical_specs(defs):
+    def _l(d: PDef):
+        return d.axes
+    return jax.tree.map(_l, defs, is_leaf=_is_pdef)
+
+
+def param_count(defs) -> int:
+    leaves = jax.tree.leaves(defs, is_leaf=_is_pdef)
+    return int(sum(np.prod(d.shape) for d in leaves))
+
+
+def param_bytes(defs) -> int:
+    leaves = jax.tree.leaves(defs, is_leaf=_is_pdef)
+    return int(sum(np.prod(d.shape) * jnp.dtype(d.dtype).itemsize
+                   for d in leaves))

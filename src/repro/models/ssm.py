@@ -1,0 +1,196 @@
+"""Mamba-2 SSD (state-space duality, arXiv:2405.21060) in chunked JAX form.
+
+Forward uses the SSD chunked algorithm: quadratic attention-like compute
+inside length-Q chunks, linear state recurrence across chunks (lax.scan).
+Decode is the O(1) recurrent update. All state math in fp32.
+
+Block structure (mamba_block_*):
+  in_proj -> [z | xs | B | C | dt] -> causal depthwise conv(xs,B,C) -> SiLU
+  -> SSD -> gated RMSNorm (y * silu(z)) -> out_proj
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import rms_norm
+from repro.models.params import PDef
+
+F32 = jnp.float32
+
+
+def mamba_defs(cfg) -> dict:
+    d, s = cfg.d_model, cfg.ssm
+    di = cfg.d_inner
+    H = cfg.ssm_heads
+    G, N = s.n_groups, s.d_state
+    d_conv = di + 2 * G * N
+    return {
+        "in_proj": PDef((d, 2 * di + 2 * G * N + H), ("embed", "ssm_inner"),
+                        "scaled"),
+        "conv_w": PDef((s.conv_width, d_conv), ("conv", "ssm_inner"),
+                       "scaled", scale=0.5),
+        "conv_b": PDef((d_conv,), ("ssm_inner",), "zeros"),
+        "a_log": PDef((H,), ("null",), "zeros", dtype=jnp.float32),
+        "dt_bias": PDef((H,), ("null",), "zeros", dtype=jnp.float32),
+        "d_skip": PDef((H,), ("null",), "ones", dtype=jnp.float32),
+        "norm": PDef((di,), ("ssm_inner",), "zeros", dtype=jnp.float32),
+        "out_proj": PDef((di, d), ("ssm_inner", "embed"), "scaled"),
+    }
+
+
+def _split_proj(cfg, zxbcdt):
+    di = cfg.d_inner
+    G, N = cfg.ssm.n_groups, cfg.ssm.d_state
+    H = cfg.ssm_heads
+    z, xs, Bm, Cm, dt = jnp.split(
+        zxbcdt, [di, 2 * di, 2 * di + G * N, 2 * di + 2 * G * N], axis=-1)
+    return z, xs, Bm, Cm, dt
+
+
+def causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv. x (B,S,C), w (W,C)."""
+    W = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x, dtype=F32)
+    for i in range(W):  # W is 4; unrolled taps beat a conv op on TPU VPU
+        out = out + xp[:, i:i + x.shape[1]].astype(F32) * w[i].astype(F32)
+    return (out + b.astype(F32)).astype(x.dtype)
+
+
+def ssd_chunked(xh, dt, a_log, Bm, Cm, chunk: int):
+    """SSD scan. xh (B,S,H,P), dt (B,S,H) fp32 post-softplus, Bm/Cm (B,S,G,N).
+
+    Returns (y (B,S,H,P), final_state (B,H,P,N)).
+    """
+    B, S, H, P = xh.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    Q = min(chunk, S)
+    S_orig = S
+    if S % Q:  # pad with dt=0/x=0 tokens: state-neutral (decay 1, contrib 0)
+        pad = Q - S % Q
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        S = S + pad
+    nc = S // Q
+    hg = H // G
+    A = -jnp.exp(a_log.astype(F32))                       # (H,) negative
+
+    xc = xh.reshape(B, nc, Q, H, P).astype(F32)
+    dtc = dt.reshape(B, nc, Q, H)
+    Bc = Bm.reshape(B, nc, Q, G, N).astype(F32)
+    Cc = Cm.reshape(B, nc, Q, G, N).astype(F32)
+
+    dA = dtc * A                                          # (B,nc,Q,H) <= 0
+    cum = jnp.cumsum(dA, axis=2)                          # within-chunk
+    # intra-chunk (masked "attention"): L[i,j] = exp(cum_i - cum_j), i >= j
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (B,nc,Q,Q,H)
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    L = jnp.where(mask[None, None, :, :, None], jnp.exp(diff), 0.0)
+    # scores_gij = C_i . B_j  per group -> expand to heads
+    CB = jnp.einsum("bcign,bcjgn->bcijg", Cc, Bc)         # (B,nc,Q,Q,G)
+    CB = jnp.repeat(CB, hg, axis=-1)                      # (B,nc,Q,Q,H)
+    W = CB * L * dtc[:, :, None, :, :]                    # weight on x_j
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", W, xc)
+
+    # chunk summary states: sum_j exp(cum_Q - cum_j) dt_j B_j x_j
+    decay_tail = jnp.exp(cum[:, :, -1:, :] - cum)         # (B,nc,Q,H)
+    Bh = jnp.repeat(Bc, hg, axis=3).reshape(B, nc, Q, H, N)
+    states = jnp.einsum("bcqh,bcqhn,bcqhp->bchpn",
+                        decay_tail * dtc, Bh, xc)         # (B,nc,H,P,N)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])               # (B,nc,H)
+
+    def step(carry, inp):
+        st, (s_c, dec) = carry, inp
+        new = st * dec[:, :, None, None] + s_c
+        return new, st                                    # emit state BEFORE chunk
+
+    init = jnp.zeros((B, H, P, N), F32)
+    xs_scan = (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0))
+    final, prevs = jax.lax.scan(step, init, xs_scan)
+    prev_states = jnp.moveaxis(prevs, 0, 1)               # (B,nc,H,P,N)
+
+    # inter-chunk: y_i += C_i . (exp(cum_i) * prev_state)
+    Ch = jnp.repeat(Cc, hg, axis=3).reshape(B, nc, Q, H, N)
+    y_inter = jnp.einsum("bcqhn,bchpn,bcqh->bcqhp",
+                         Ch, prev_states, jnp.exp(cum))
+    y = (y_intra + y_inter).reshape(B, S, H, P)
+    if S != S_orig:
+        y = jax.lax.slice_in_dim(y, 0, S_orig, axis=1)
+    return y, final
+
+
+def mamba_block_fwd(p, x, cfg, *, dot=None) -> Tuple[jax.Array, dict]:
+    """x (B,S,D) -> (y (B,S,D), cache {conv_state, ssm_state})."""
+    B, S, D = x.shape
+    s = cfg.ssm
+    di, H, P = cfg.d_inner, cfg.ssm_heads, s.head_dim
+    G, N = s.n_groups, s.d_state
+    dot = dot or (lambda a, w, name: jnp.einsum(
+        "bsd,de->bse", a, w))
+    zxbcdt = dot(x, p["in_proj"], "ssm_in")
+    z, xs, Bm, Cm, dt = _split_proj(cfg, zxbcdt)
+    conv_in = jnp.concatenate([xs, Bm, Cm], axis=-1)
+    conv_out = jax.nn.silu(causal_conv(conv_in, p["conv_w"], p["conv_b"]))
+    xs, Bm, Cm = jnp.split(conv_out, [di, di + G * N], axis=-1)
+    dtf = jax.nn.softplus(dt.astype(F32) + p["dt_bias"])
+    xh = xs.reshape(B, S, H, P)
+    y, final = ssd_chunked(xh, dtf, p["a_log"], Bm.reshape(B, S, G, N),
+                           Cm.reshape(B, S, G, N), s.chunk)
+    y = y + xh.astype(F32) * p["d_skip"][None, None, :, None]
+    y = y.reshape(B, S, di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = dot(y, p["out_proj"], "ssm_out")
+    tail = jax.lax.slice_in_dim(conv_in, max(S - (s.conv_width - 1), 0), S,
+                                axis=1)
+    cache = {"conv": tail, "state": final.astype(F32)}
+    return out, cache
+
+
+def mamba_block_decode(p, x, cache, cfg, *, dot=None):
+    """One-token decode. x (B,1,D); cache {conv (B,W-1,C), state (B,H,P,N)}."""
+    B = x.shape[0]
+    s = cfg.ssm
+    di, H, P = cfg.d_inner, cfg.ssm_heads, s.head_dim
+    G, N = s.n_groups, s.d_state
+    dot = dot or (lambda a, w, name: jnp.einsum(
+        "bsd,de->bse", a, w))
+    zxbcdt = dot(x, p["in_proj"], "ssm_in")
+    z, xs, Bm, Cm, dt = _split_proj(cfg, zxbcdt)
+    conv_in = jnp.concatenate([xs, Bm, Cm], axis=-1)      # (B,1,C)
+    window = jnp.concatenate([cache["conv"], conv_in], axis=1)  # (B,W,C)
+    conv_out = jnp.einsum("bwc,wc->bc", window.astype(F32),
+                          p["conv_w"].astype(F32)) + p["conv_b"].astype(F32)
+    conv_out = jax.nn.silu(conv_out)[:, None, :].astype(x.dtype)
+    xs, Bm, Cm = jnp.split(conv_out, [di, di + G * N], axis=-1)
+    dtf = jax.nn.softplus(dt.astype(F32) + p["dt_bias"])  # (B,1,H)
+    A = -jnp.exp(p["a_log"].astype(F32))
+    dA = jnp.exp(dtf[:, 0, :] * A)                        # (B,H)
+    xh = xs.reshape(B, H, P).astype(F32)
+    Bh = jnp.repeat(Bm.reshape(B, G, N), H // G, axis=1)  # (B,H,N)
+    Ch = jnp.repeat(Cm.reshape(B, G, N), H // G, axis=1)
+    state = cache["state"] * dA[:, :, None, None] + \
+        jnp.einsum("bh,bhn,bhp->bhpn", dtf[:, 0], Bh.astype(F32), xh)
+    y = jnp.einsum("bhn,bhpn->bhp", Ch.astype(F32), state)
+    y = y + xh * p["d_skip"][None, :, None]
+    y = y.reshape(B, 1, di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = dot(y, p["out_proj"], "ssm_out")
+    new_cache = {"conv": window[:, 1:], "state": state}
+    return out, new_cache
+
+
+def mamba_cache_spec(cfg, batch: int):
+    """ShapeDtypeStructs for one layer's decode cache."""
+    s = cfg.ssm
+    d_conv = cfg.d_inner + 2 * s.n_groups * s.d_state
+    return {
+        "conv": jax.ShapeDtypeStruct((batch, s.conv_width - 1, d_conv),
+                                     jnp.bfloat16),
+        "state": jax.ShapeDtypeStruct(
+            (batch, cfg.ssm_heads, s.head_dim, s.d_state), jnp.float32),
+    }

@@ -1,0 +1,2 @@
+from repro.optim.adamw import (adamw_init, adamw_update, cosine_lr,
+                               clip_by_global_norm, opt_state_logical_specs)

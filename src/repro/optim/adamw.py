@@ -1,0 +1,147 @@
+"""AdamW in pure JAX, FSDP-friendly.
+
+Layout: model params live in bf16 (collectives move bf16); the optimizer
+holds an fp32 master copy plus first/second moments. Moments can optionally
+be stored int8 with per-block fp32 scales (OptimConfig.quantized_moments) —
+a beyond-paper trick in the paper's own spirit (quantize what dominates
+memory): it cuts optimizer HBM from 12 to 6 bytes/param, which is what lets
+llama4-maverick-400b train on a single 256-chip v5e pod (see EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+# ------------------------------------------------------- moment quantizer ----
+def moment_block_for(shape, block: int) -> int:
+    """Quantization block along the LAST dim only — the int8 buffer keeps the
+    param's exact shape (and therefore its sharding). Flattening to
+    (n//128, 128) was observed to force involuntary full rematerialization in
+    the SPMD partitioner (layout mismatch vs the fp32 grads)."""
+    last = shape[-1] if shape else 1
+    return block if last % block == 0 else last
+
+
+def quantize_moment(x: jax.Array, block: int) -> Dict[str, jax.Array]:
+    xf = x.astype(F32)
+    b = moment_block_for(x.shape, block)
+    g = xf.reshape(x.shape[:-1] + (x.shape[-1] // b, b))
+    scale = jnp.max(jnp.abs(g), axis=-1, keepdims=True) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return {"q": q.reshape(x.shape), "scale": scale[..., 0]}
+
+
+def dequantize_moment(qs: Dict[str, jax.Array], shape) -> jax.Array:
+    q = qs["q"].astype(F32)
+    nb = qs["scale"].shape[-1]
+    b = shape[-1] // nb
+    g = q.reshape(shape[:-1] + (nb, b)) * qs["scale"][..., None]
+    return g.reshape(shape)
+
+
+# ----------------------------------------------------------------- state ----
+def _moment_like(p: jax.Array, ocfg):
+    if ocfg.quantized_moments:
+        return quantize_moment(jnp.zeros(p.shape, F32), ocfg.moment_block)
+    return jnp.zeros(p.shape, F32)
+
+
+def adamw_init(params, ocfg) -> Dict[str, Any]:
+    return {
+        "master": jax.tree.map(lambda p: p.astype(F32), params),
+        "m": jax.tree.map(lambda p: _moment_like(p, ocfg), params),
+        "v": jax.tree.map(lambda p: _moment_like(p, ocfg), params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def opt_state_logical_specs(param_specs, ocfg):
+    """Logical specs for the optimizer state, mirroring the param specs.
+    Quantized moments keep the param's exact shape (q) so they inherit its
+    axes; the per-block scale drops the last (blocked) axis to replicated."""
+    def moment_spec(spec):
+        if ocfg.quantized_moments:
+            return {"q": spec, "scale": spec[:-1] + (None,) if spec else ()}
+        return spec
+    is_axes = lambda x: isinstance(x, tuple) and all(
+        a is None or isinstance(a, str) for a in x)
+    return {
+        "master": param_specs,
+        "m": jax.tree.map(moment_spec, param_specs, is_leaf=is_axes),
+        "v": jax.tree.map(moment_spec, param_specs, is_leaf=is_axes),
+        "count": (),
+    }
+
+
+# ---------------------------------------------------------------- update ----
+def cosine_lr(step, ocfg):
+    warm = jnp.minimum(step.astype(F32) / max(ocfg.warmup_steps, 1), 1.0)
+    t = jnp.clip((step.astype(F32) - ocfg.warmup_steps)
+                 / max(ocfg.total_steps - ocfg.warmup_steps, 1), 0.0, 1.0)
+    return ocfg.lr * warm * 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(F32)))
+                      for g in jax.tree.leaves(grads)))
+    scale = jnp.minimum(1.0, max_norm / (gn + 1e-9))
+    return jax.tree.map(lambda g: (g.astype(F32) * scale), grads), gn
+
+
+def adamw_update(grads, opt_state, ocfg):
+    """Returns (new_params_bf16, new_opt_state, metrics)."""
+    count = opt_state["count"] + 1
+    lr = cosine_lr(count, ocfg)
+    b1, b2 = ocfg.b1, ocfg.b2
+    bc1 = 1.0 - b1 ** count.astype(F32)
+    bc2 = 1.0 - b2 ** count.astype(F32)
+    grads, gnorm = clip_by_global_norm(grads, ocfg.grad_clip)
+
+    def upd(g, master, m, v):
+        if ocfg.quantized_moments:
+            mf = dequantize_moment(m, g.shape)
+            vf = dequantize_moment(v, g.shape)
+        else:
+            mf, vf = m, v
+        mf = b1 * mf + (1 - b1) * g
+        vf = b2 * vf + (1 - b2) * g * g
+        mhat = mf / bc1
+        vhat = vf / bc2
+        step = mhat / (jnp.sqrt(vhat) + ocfg.eps)
+        new_master = master - lr * (step + ocfg.weight_decay * master)
+        if ocfg.quantized_moments:
+            m_out = quantize_moment(mf, ocfg.moment_block)
+            v_out = quantize_moment(vf, ocfg.moment_block)
+        else:
+            m_out, v_out = mf, vf
+        return new_master, m_out, v_out
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_ma = tdef.flatten_up_to(opt_state["master"])
+    is_q = lambda x: isinstance(x, dict) and "q" in x
+    flat_m = jax.tree.flatten(opt_state["m"], is_leaf=is_q)[0] \
+        if ocfg.quantized_moments else tdef.flatten_up_to(opt_state["m"])
+    flat_v = jax.tree.flatten(opt_state["v"], is_leaf=is_q)[0] \
+        if ocfg.quantized_moments else tdef.flatten_up_to(opt_state["v"])
+
+    new_master, new_m, new_v = [], [], []
+    for g, ma, m, v in zip(flat_g, flat_ma, flat_m, flat_v):
+        nm, mm, vv = upd(g, ma, m, v)
+        new_master.append(nm)
+        new_m.append(mm)
+        new_v.append(vv)
+
+    new_state = {
+        "master": jax.tree.unflatten(tdef, new_master),
+        "m": jax.tree.unflatten(tdef, new_m),
+        "v": jax.tree.unflatten(tdef, new_v),
+        "count": count,
+    }
+    new_params = jax.tree.map(lambda ma: ma.astype(jnp.bfloat16),
+                              new_state["master"])
+    return new_params, new_state, {"lr": lr, "grad_norm": gnorm}

@@ -1,0 +1,190 @@
+"""While-aware HLO cost attribution.
+
+XLA's ``compiled.cost_analysis()`` counts a while-loop body ONCE — but every
+layer stack here is a `lax.scan`, so FLOPs/bytes/collectives are undercounted
+by ~num_layers (observed useful_flops_ratio up to 67x). This module reparses
+the optimized HLO text and attributes costs with loop multipliers:
+
+  * computations are parsed into (name -> instructions);
+  * a call graph is walked from ENTRY; `while` bodies inherit
+    multiplier x trip_count (trip count = the s32 constant in the loop
+    condition computation — the canonical lax.scan lowering);
+  * `dot` FLOPs are 2 * prod(result_dims) * prod(lhs_contracting_dims), with
+    operand shapes resolved from the per-computation symbol table;
+  * collective bytes follow repro.roofline.analysis.COLLECTIVES semantics
+    (all-reduce weighted 2x).
+
+This gives exact loop-aware compute/collective terms. HBM bytes remain
+fusion-dependent; the memory term instead comes from the analytic model in
+`analysis.analytic_memory_bytes` (documented in EXPERIMENTS.md §Roofline).
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "s4": 0.5, "u4": 0.5,
+}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute", "collective-broadcast",
+               "ragged-all-to-all")
+
+_COMP_RE = re.compile(r"^(?:ENTRY )?%?([\w.\-]+)(?:\.clone)? \(.*\) -> .+ \{\s*$")
+_INSTR_RE = re.compile(r"^\s+(?:ROOT )?%?([\w.\-]+) = (.*)$")
+_SHAPE_RE = re.compile(r"^\(?((?:\w+\[[\d,]*\]\S*(?:, )?)+)\)?")
+_ONE_SHAPE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_dims(type_str: str):
+    """First array shape in a type string -> (dtype, dims list)."""
+    m = _ONE_SHAPE.search(type_str)
+    if not m:
+        return None, []
+    dt, dims = m.group(1), m.group(2)
+    return dt, [int(d) for d in dims.split(",") if d]
+
+
+def _all_shape_bytes(type_str: str) -> float:
+    total = 0.0
+    for dt, dims in _ONE_SHAPE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+class Computation:
+    def __init__(self, name: str):
+        self.name = name
+        self.lines: List[str] = []
+        self.shapes: Dict[str, Tuple[str, List[int]]] = {}
+
+
+def parse_computations(hlo: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur = None
+    entry_alias = None
+    for line in hlo.splitlines():
+        if line.startswith("}"):
+            cur = None
+            continue
+        m = _COMP_RE.match(line)
+        if m and "{" in line:
+            name = m.group(1)
+            cur = Computation(name)
+            comps[name] = cur
+            if line.startswith("ENTRY"):
+                comps["__entry__"] = cur
+            continue
+        if cur is None:
+            continue
+        mi = _INSTR_RE.match(line)
+        if mi:
+            cur.lines.append(line)
+            name, rhs = mi.group(1), mi.group(2)
+            dt, dims = _shape_dims(rhs)
+            if dt:
+                cur.shapes[name] = (dt, dims)
+    return comps
+
+
+def _trip_count(cond: Computation) -> int:
+    """Largest s32 constant in the loop condition (lax.scan lowering)."""
+    best = 1
+    for line in cond.lines:
+        for m in re.finditer(r"s32\[\] constant\((\d+)\)", line):
+            best = max(best, int(m.group(1)))
+    return best
+
+
+_CALL_RE = re.compile(
+    r"(?:calls|to_apply|body)=%?([\w.\-]+)|condition=%?([\w.\-]+)"
+    r"|branch_computations=\{([^}]*)\}")
+
+
+def _dot_flops(comp: Computation, line: str) -> float:
+    m = re.match(r"\s+(?:ROOT )?%?[\w.\-]+ = (\S+) dot\(%?([\w.\-]+), ", line)
+    if not m:
+        return 0.0
+    out_type, lhs_name = m.group(1), m.group(2)
+    _, out_dims = _shape_dims(out_type)
+    n_out = 1
+    for d in out_dims:
+        n_out *= d
+    mc = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", line)
+    contract = 1
+    lhs = comp.shapes.get(lhs_name)
+    if mc and lhs:
+        for idx in mc.group(1).split(","):
+            if idx:
+                contract *= lhs[1][int(idx)]
+    return 2.0 * n_out * contract
+
+
+def _collective_bytes(line: str) -> Tuple[str, float]:
+    m = re.match(r"\s+(?:ROOT )?%?[\w.\-]+ = (.+?) (" +
+                 "|".join(COLLECTIVES) + r")\(", line)
+    if not m:
+        return "", 0.0
+    b = _all_shape_bytes(m.group(1))
+    op = m.group(2)
+    if op == "all-reduce":
+        b *= 2.0
+    return op, b
+
+
+def analyze_hlo(hlo: str) -> Dict[str, float]:
+    """Loop-aware totals: {'dot_flops', 'coll_bytes', per-kind coll bytes,
+    'coll_count'} for the per-device program."""
+    comps = parse_computations(hlo)
+    entry = comps.get("__entry__")
+    if entry is None:
+        return {"dot_flops": 0.0, "coll_bytes": 0.0, "coll_count": 0}
+    totals = {"dot_flops": 0.0, "coll_bytes": 0.0, "coll_count": 0}
+    for k in COLLECTIVES:
+        totals[k] = 0.0
+
+    seen_stack = set()
+
+    def visit(comp: Computation, mult: float):
+        if comp.name in seen_stack:  # defensive: no recursion in HLO
+            return
+        seen_stack.add(comp.name)
+        for line in comp.lines:
+            totals["dot_flops"] += _dot_flops(comp, line) * mult
+            op, b = _collective_bytes(line)
+            if op:
+                totals[op] += b * mult
+                totals["coll_bytes"] += b * mult
+                totals["coll_count"] += 1
+            # follow calls
+            if " while(" in line:
+                mb = re.search(r"body=%?([\w.\-]+)", line)
+                mc = re.search(r"condition=%?([\w.\-]+)", line)
+                trip = _trip_count(comps[mc.group(1)]) \
+                    if mc and mc.group(1) in comps else 1
+                if mb and mb.group(1) in comps:
+                    visit(comps[mb.group(1)], mult * trip)
+            else:
+                for mm in re.finditer(r"(?:calls|to_apply)=%?([\w.\-]+)",
+                                      line):
+                    callee = mm.group(1)
+                    if callee in comps:
+                        visit(comps[callee], mult)
+                mb = re.search(r"branch_computations=\{([^}]*)\}", line)
+                if mb:
+                    for callee in re.findall(r"%?([\w.\-]+)", mb.group(1)):
+                        if callee in comps:
+                            visit(comps[callee], mult)
+        seen_stack.discard(comp.name)
+
+    visit(entry, 1.0)
+    return totals

@@ -1,0 +1,149 @@
+"""Quantized serving: HAQ policies as first-class serve-step parameters.
+
+Matmul weights are STORED int8 (or int4, two-per-byte packed along the
+contracting dim, key "q4") with per-tensor fp32 scales; the `dot` hook
+dequantizes in the compute path. This is what the dry-run lowers for the
+quantized decode cells — HBM weight bytes (the decode memory-roofline term)
+drop 2x/4x vs bf16: the paper's Fig. 4 roofline move realized at pod scale.
+
+int4 packing applies where the contracting dim is the second-to-last
+(2D ffn/proj weights, MoE expert tensors); 3D attention projections clamp to
+int8 (their share of decode weight bytes is small — noted in EXPERIMENTS.md).
+
+On real TPUs the W8A16/W4A16 paths dispatch to repro.kernels.quant_matmul;
+under XLA (dry-run/CPU) the dequant+einsum form has identical HBM traffic.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantization import default_site_of, _einsum_for
+from repro.models.params import PDef
+
+F32 = jnp.float32
+
+_QUANT_KEYS = ("'wq'", "'wk'", "'wv'", "'wo'", "'w_in'", "'w_gate'",
+               "'w_out'", "'in_proj'", "'out_proj'", "'lm_head'",
+               "'fuse_in'", "'fuse_out'")
+# 3D attention projections: contracting dim is not -2 -> int8 only
+_NO_PACK = ("'wq'", "'wk'", "'wv'", "'wo'")
+
+
+def _bits_for(keystr: str, policy: Optional[Dict[str, int]],
+              default_bits: int) -> Optional[int]:
+    if not any(k in keystr for k in _QUANT_KEYS):
+        return None
+    if policy is None:
+        bits = default_bits
+    else:
+        site = default_site_of(keystr, None)
+        if site is None:
+            return None
+        bits = policy.get(site, default_bits)
+    if bits <= 4 and any(k in keystr for k in _NO_PACK):
+        bits = 8
+    return bits
+
+
+def quantize_defs(defs, *, policy: Optional[Dict[str, int]] = None,
+                  default_bits: int = 8):
+    """PDef tree -> tree where eligible weights become int-stored dicts.
+    Layer-stacked weights (leading 'layer' axis) carry per-layer scales so
+    lax.scan can slice them alongside q."""
+    def walk(path, d):
+        if not isinstance(d, PDef):
+            return d
+        keystr = jax.tree_util.keystr(path)
+        bits = _bits_for(keystr, policy, default_bits)
+        if bits is None or len(d.shape) < 2:
+            return d
+        stacked = d.axes and d.axes[0] == "layer"
+        if stacked:
+            scale = PDef((d.shape[0], 1), ("layer", "null"), "ones",
+                         dtype=F32)
+        else:
+            scale = PDef((1,), ("null",), "ones", dtype=F32)
+        if bits <= 4:
+            shape = d.shape[:-2] + (d.shape[-2] // 2, d.shape[-1])
+            return {"q4": PDef(shape, d.axes, "zeros", dtype=jnp.int8),
+                    "scale": scale}
+        return {"q": PDef(d.shape, d.axes, "zeros", dtype=jnp.int8),
+                "scale": scale}
+    return jax.tree_util.tree_map_with_path(
+        walk, defs, is_leaf=lambda x: isinstance(x, PDef))
+
+
+def quantize_params(params, *, policy: Optional[Dict[str, int]] = None,
+                    default_bits: int = 8):
+    """Materialize quantized leaves from real bf16 params."""
+    # stacked (scanned) param subtrees get per-layer scales
+    _STACKED = ("['blocks']", "['mamba']", "['enc']", "['dec']")
+
+    def walk(path, w):
+        keystr = jax.tree_util.keystr(path)
+        bits = _bits_for(keystr, policy, default_bits)
+        if bits is None or w.ndim < 2:
+            return w
+        wf = w.astype(F32)
+        qmax = 2.0 ** (min(bits, 8) - 1) - 1.0
+        if any(s in keystr for s in _STACKED) and w.ndim >= 3:
+            red = tuple(range(1, w.ndim))
+            amax = jnp.max(jnp.abs(wf), axis=red)            # (L,)
+            scale = (amax / qmax + 1e-12)[:, None]           # (L, 1)
+            div = scale.reshape((w.shape[0],) + (1,) * (w.ndim - 1))
+        else:
+            scale = (jnp.max(jnp.abs(wf)) / qmax + 1e-12)[None]
+            div = scale[0]
+        q = jnp.clip(jnp.round(wf / div), -qmax, qmax).astype(jnp.int8)
+        if bits <= 4:
+            lo = q[..., 0::2, :] & 0x0F
+            hi = (q[..., 1::2, :] & 0x0F) << 4
+            return {"q4": (lo | hi).astype(jnp.int8),
+                    "scale": scale.astype(F32)}
+        return {"q": q, "scale": scale.astype(F32)}
+    return jax.tree_util.tree_map_with_path(
+        walk, params, is_leaf=lambda x: hasattr(x, "ndim"))
+
+
+def _unpack4(q: jax.Array) -> jax.Array:
+    lo = (q.astype(jnp.int8) << 4) >> 4
+    hi = q.astype(jnp.int8) >> 4
+    stacked = jnp.stack([lo, hi], axis=-2)           # (..., K/2, 2, N)
+    sh = q.shape[:-2] + (q.shape[-2] * 2, q.shape[-1])
+    return stacked.reshape(sh)
+
+
+def dequant_dot(x, w, name):
+    """dot hook: dequantize dict-stored weights, plain einsum otherwise."""
+    if not isinstance(w, dict):
+        return jnp.einsum(_einsum_for(x, w), x, w)
+    if "q4" in w:
+        q = _unpack4(w["q4"])
+    else:
+        q = w["q"]
+    wde = (q.astype(F32) * w["scale"]).astype(x.dtype)
+    return jnp.einsum(_einsum_for(x, wde), x, wde)
+
+
+def avg_weight_bits(defs_q) -> float:
+    """Average stored bits per weight element (analytic memory model)."""
+    import numpy as np
+    elems, bits = 0.0, 0.0
+    leaves = jax.tree_util.tree_flatten_with_path(
+        defs_q, is_leaf=lambda x: isinstance(x, (PDef, dict))
+        and (isinstance(x, PDef) or "q" in x or "q4" in x))[0]
+    for path, d in leaves:
+        if isinstance(d, dict):
+            key = "q4" if "q4" in d else "q"
+            n = float(np.prod(d[key].shape))
+            logical = n * (2 if key == "q4" else 1)
+            elems += logical
+            bits += n * 8
+        elif isinstance(d, PDef):
+            n = float(np.prod(d.shape))
+            elems += n
+            bits += n * jnp.dtype(d.dtype).itemsize * 8
+    return bits / max(elems, 1.0)

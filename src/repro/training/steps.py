@@ -1,0 +1,110 @@
+"""Step builders: train_step / prefill_step / serve_step.
+
+These are the exact functions the dry-run lowers for the production meshes
+and the trainer/server run on real hardware. `ac` is the activation-sharding
+hook (distributed.sharding.make_ac); `dot` the HAQ quantized-matmul hook.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.adamw import adamw_init, adamw_update
+
+F32 = jnp.float32
+
+
+def make_train_step(model, tcfg, *, ac=None, dot=None) -> Callable:
+    ocfg = tcfg.optim
+    M = tcfg.microbatches
+
+    def grad_fn(params, batch):
+        def loss_fn(p):
+            return model.loss(p, batch, remat=tcfg.remat, ac=ac, dot=dot)
+        return jax.value_and_grad(loss_fn)(params)
+
+    def train_step(state: Dict[str, Any], batch: Dict[str, Any]):
+        params = state["params"]
+        if M > 1:
+            micro = jax.tree.map(
+                lambda a: a.reshape((M, a.shape[0] // M) + a.shape[1:]),
+                batch)
+
+            def acc_body(carry, mb):
+                loss_acc, g_acc = carry
+                loss, g = grad_fn(params, mb)
+                return (loss_acc + loss,
+                        jax.tree.map(lambda a, b: a + b.astype(F32),
+                                     g_acc, g)), None
+
+            zero = jax.tree.map(lambda p: jnp.zeros(p.shape, F32), params)
+            (loss, grads), _ = jax.lax.scan(
+                acc_body, (jnp.zeros((), F32), zero), micro)
+            loss = loss / M
+            grads = jax.tree.map(lambda g: g / M, grads)
+        else:
+            loss, grads = grad_fn(params, batch)
+        new_params, new_opt, metrics = adamw_update(grads, state["opt"], ocfg)
+        new_state = {"params": new_params, "opt": new_opt}
+        return new_state, {"loss": loss, **metrics}
+
+    return train_step
+
+
+def init_train_state(model, tcfg, key):
+    params = model.init(key)
+    return {"params": params, "opt": adamw_init(params, tcfg.optim)}
+
+
+def abstract_train_state(model, tcfg):
+    """ShapeDtypeStruct mirror of init_train_state (dry-run, no allocation)."""
+    params = model.abstract_params()
+
+    def moment(p):
+        if tcfg.optim.quantized_moments:
+            from repro.optim.adamw import moment_block_for
+            b = moment_block_for(p.shape, tcfg.optim.moment_block)
+            nb = (p.shape[-1] // b) if p.shape else 1
+            return {
+                "q": jax.ShapeDtypeStruct(p.shape, jnp.int8),
+                "scale": jax.ShapeDtypeStruct(p.shape[:-1] + (nb,), F32),
+            }
+        return jax.ShapeDtypeStruct(p.shape, F32)
+
+    return {
+        "params": params,
+        "opt": {
+            "master": jax.tree.map(
+                lambda p: jax.ShapeDtypeStruct(p.shape, F32), params),
+            "m": jax.tree.map(moment, params),
+            "v": jax.tree.map(moment, params),
+            "count": jax.ShapeDtypeStruct((), jnp.int32),
+        },
+    }
+
+
+def train_state_logical_specs(model, tcfg):
+    from repro.optim.adamw import opt_state_logical_specs
+    pspecs = model.logical_specs()
+    return {
+        "params": pspecs,
+        "opt": opt_state_logical_specs(pspecs, tcfg.optim),
+    }
+
+
+def make_prefill_step(model, *, ac=None, dot=None) -> Callable:
+    def prefill_step(params, batch):
+        return model.prefill(params, batch, ac=ac, dot=dot)
+
+    return prefill_step
+
+
+def make_serve_step(model, *, ac=None, dot=None) -> Callable:
+    def serve_step(params, cache, token, pos):
+        logits, new_cache = model.decode_step(params, cache, token, pos,
+                                              ac=ac, dot=dot)
+        return logits, new_cache
+
+    return serve_step

@@ -1,0 +1,40 @@
+import os
+
+# Smoke tests and benches must see the single real CPU device (the dry-run
+# sets its own 512-device flag in its own process).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, tiny_config
+from repro.models.api import build_model
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+def tiny_batch(cfg, B=2, S=32, seed=1):
+    key = jax.random.PRNGKey(seed)
+    if cfg.is_encdec:
+        Sd = max(S // cfg.dec_ratio, 2)
+        return {
+            "frames": jax.random.normal(key, (B, S, cfg.d_model),
+                                        jnp.bfloat16),
+            "tokens": jnp.ones((B, Sd), jnp.int32),
+            "labels": jnp.ones((B, Sd), jnp.int32),
+        }
+    if cfg.frontend == "vision_stub":
+        Sp = int(S * cfg.patch_frac)
+        return {
+            "patches": jax.random.normal(key, (B, Sp, cfg.d_model),
+                                         jnp.bfloat16),
+            "tokens": jnp.ones((B, S - Sp), jnp.int32),
+            "labels": jnp.ones((B, S - Sp), jnp.int32),
+        }
+    toks = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    return {"tokens": toks, "labels": toks}

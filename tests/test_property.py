@@ -1,0 +1,114 @@
+"""Hypothesis property tests on system invariants (assignment req. (c))."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import quantization as q
+from repro.core.hardware_model import V5E_EDGE, V5E_POD, linear_cost
+from repro.core.pruning import keep_mask
+from repro.core.haq import enforce_budget, enumerate_sites, resource, W_BITS, A_BITS
+from repro.configs import get_config
+from repro.optim.adamw import quantize_moment, dequantize_moment
+
+SHORT = settings(max_examples=25, deadline=None)
+
+
+@SHORT
+@given(bits=st.integers(2, 8), seed=st.integers(0, 100),
+       rows=st.integers(1, 9), cols=st.integers(1, 65))
+def test_fake_quant_bounded_error(bits, seed, rows, cols):
+    """|w - Q(w)| <= scale/2 per element (uniform quantizer bound)."""
+    w = np.random.default_rng(seed).standard_normal((rows, cols))
+    w = jnp.asarray(w, jnp.float32)
+    wq = q.fake_quant_weight(w, bits)
+    amax = jnp.max(jnp.abs(w), axis=0)
+    scale = amax / (2.0 ** (bits - 1) - 1) + 1e-12
+    assert bool(jnp.all(jnp.abs(w - wq) <= scale[None, :] * 0.5 + 1e-6))
+
+
+@SHORT
+@given(bits=st.integers(2, 8))
+def test_fake_quant_monotone_in_bits(bits):
+    """More bits never increases reconstruction error."""
+    w = jnp.asarray(np.random.default_rng(0).standard_normal((16, 32)),
+                    jnp.float32)
+    e1 = float(q.quant_error(w, bits))
+    e2 = float(q.quant_error(w, bits + 1)) if bits < 8 else 0.0
+    assert e2 <= e1 + 1e-6
+
+
+@SHORT
+@given(keep=st.floats(0.05, 1.0), n=st.integers(2, 300), seed=st.integers(0, 50))
+def test_keep_mask_count(keep, n, seed):
+    imp = jnp.asarray(np.random.default_rng(seed).standard_normal(n) ** 2)
+    m = keep_mask(imp, keep)
+    k = int(jnp.sum(m))
+    assert 1 <= k <= n
+    assert abs(k - round(keep * n)) <= 1
+    # kept units are the most important ones
+    thresh = jnp.sort(imp)[n - k]
+    assert bool(jnp.all(imp[m > 0] >= thresh - 1e-9))
+
+
+@SHORT
+@given(w_bits=st.integers(2, 8), a_bits=st.sampled_from(A_BITS),
+       tokens=st.integers(1, 4096))
+def test_latency_monotone_in_bits(w_bits, a_bits, tokens):
+    """Hardware-model latency & energy never increase when bits shrink."""
+    c = linear_cost(tokens, 1024, 4096)
+    for hw in (V5E_EDGE, V5E_POD):
+        t1 = float(c.latency(hw, w_bits, a_bits))
+        t2 = float(c.latency(hw, min(w_bits + 1, 8), a_bits))
+        assert t1 <= t2 + 1e-12
+        e1 = float(c.energy(hw, w_bits, a_bits))
+        e2 = float(c.energy(hw, min(w_bits + 1, 8), a_bits))
+        assert e1 <= e2 + 1e-12
+
+
+@SHORT
+@given(frac=st.floats(0.2, 1.0), seed=st.integers(0, 20))
+def test_haq_budget_enforcement(frac, seed):
+    """After back-off the policy ALWAYS meets the budget (paper's invariant),
+    unless even all-min-bits cannot (then it equals all-min-bits)."""
+    cfg = get_config("gemma2-2b")
+    sites = enumerate_sites(cfg, batch=1, seq=128, decode=True)
+    rng = np.random.default_rng(seed)
+    wa = [(int(rng.choice(W_BITS)), int(rng.choice(A_BITS))) for _ in sites]
+    base = resource(sites, [(8, 8)] * len(sites), V5E_EDGE, "latency")
+    budget = frac * base
+    out = enforce_budget(sites, wa, V5E_EDGE, budget, "latency")
+    used = resource(sites, out, V5E_EDGE, "latency")
+    floor = resource(sites, [(min(W_BITS), min(A_BITS))] * len(sites),
+                     V5E_EDGE, "latency")
+    assert used <= budget + 1e-12 or abs(used - floor) < 1e-12
+
+
+@SHORT
+@given(seed=st.integers(0, 40), rows=st.integers(1, 6),
+       cols=st.sampled_from([16, 128, 384, 100]))
+def test_moment_quantizer_roundtrip(seed, rows, cols):
+    x = jnp.asarray(
+        np.random.default_rng(seed).standard_normal((rows, cols)), jnp.float32)
+    qd = dequantize_moment(quantize_moment(x, 128), x.shape)
+    amax = float(jnp.max(jnp.abs(x))) + 1e-12
+    assert float(jnp.max(jnp.abs(qd - x))) <= amax / 127.0 + 1e-6
+
+
+@SHORT
+@given(S=st.integers(2, 65), seed=st.integers(0, 10))
+def test_ssd_chunk_invariance(S, seed):
+    """SSD output is independent of the chunk size (state-passing exact)."""
+    from repro.models.ssm import ssd_chunked
+    rng = np.random.default_rng(seed)
+    B, H, P, G, N = 1, 2, 4, 1, 4
+    xh = jnp.asarray(rng.standard_normal((B, S, H, P)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.01, 0.5, (B, S, H)), jnp.float32)
+    a_log = jnp.asarray(rng.uniform(-1, 0.5, (H,)), jnp.float32)
+    Bm = jnp.asarray(rng.standard_normal((B, S, G, N)), jnp.float32)
+    Cm = jnp.asarray(rng.standard_normal((B, S, G, N)), jnp.float32)
+    y1, f1 = ssd_chunked(xh, dt, a_log, Bm, Cm, chunk=4)
+    y2, f2 = ssd_chunked(xh, dt, a_log, Bm, Cm, chunk=16)
+    assert float(jnp.max(jnp.abs(y1 - y2))) < 1e-3
+    assert float(jnp.max(jnp.abs(f1 - f2))) < 1e-3

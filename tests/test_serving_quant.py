@@ -1,0 +1,80 @@
+"""Quantized serving path (serving/quant.py): structure, packing, loss."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import tiny_config
+from repro.models.api import build_model
+from repro.models.params import abstract_params, logical_specs
+from repro.serving import quant as sq
+
+from conftest import tiny_batch
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = tiny_config("granite-3-8b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def test_quantize_defs_structure(setup):
+    cfg, model, _ = setup
+    defs_q = sq.quantize_defs(model.defs, default_bits=8)
+    ap = abstract_params(defs_q)
+    assert ap["lm_head"]["q"].dtype == jnp.int8
+    assert ap["blocks"]["sub0"]["ffn"]["w_in"]["q"].dtype == jnp.int8
+    # stacked scale carries the layer dim for lax.scan
+    assert ap["blocks"]["sub0"]["ffn"]["w_in"]["scale"].shape[0] == \
+        cfg.num_layers
+    # norms stay fp32
+    assert ap["final_norm"].dtype == jnp.float32
+    # logical specs still resolve (axis tuples are leaves)
+    ls = logical_specs(defs_q)
+    is_axes = lambda x: isinstance(x, tuple) and all(
+        a is None or isinstance(a, str) for a in x)
+    assert jax.tree.structure(ls, is_leaf=is_axes) == jax.tree.structure(ap)
+
+
+def test_int4_halves_bytes(setup):
+    _, model, _ = setup
+    d8 = sq.quantize_defs(model.defs, default_bits=8)
+    d4 = sq.quantize_defs(model.defs, default_bits=4)
+    assert sq.avg_weight_bits(d4) < sq.avg_weight_bits(d8) < 16.0
+    q8 = abstract_params(d8)["blocks"]["sub0"]["ffn"]["w_in"]["q"]
+    q4 = abstract_params(d4)["blocks"]["sub0"]["ffn"]["w_in"]["q4"]
+    assert q4.shape[-2] * 2 == q8.shape[-2]
+
+
+def test_quantized_serving_equivalence(setup):
+    cfg, model, params = setup
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 48), 0,
+                              cfg.vocab_size)
+    lg_fp, _ = model.prefill(params, {"tokens": toks})
+    pq = sq.quantize_params(params, default_bits=8)
+    lg_q, cache = model.prefill(pq, {"tokens": toks}, dot=sq.dequant_dot)
+    dq, _ = model.decode_step(pq, cache, toks[:, -1:],
+                              jnp.asarray(47, jnp.int32), dot=sq.dequant_dot)
+    assert bool(jnp.all(jnp.isfinite(lg_q))) and \
+        bool(jnp.all(jnp.isfinite(dq)))
+    # loss-level fidelity on trained magnitudes is covered by the benchmark;
+    # untrained tiny logits are near-uniform so only ask for clear top-1
+    # correlation above chance (1/512)
+    agree = jnp.mean((jnp.argmax(lg_fp, -1) == jnp.argmax(lg_q, -1))
+                     .astype(jnp.float32))
+    assert float(agree) > 0.1, float(agree)
+
+
+def test_unpack_pack_roundtrip():
+    w = jax.random.normal(jax.random.PRNGKey(2), (8, 16, 32)) * 0.2
+    pq = sq.quantize_params({"blocks": {"x": {"ffn": {"w_in": w}}}},
+                            default_bits=4)
+    d = pq["blocks"]["x"]["ffn"]["w_in"]
+    assert "q4" in d and d["q4"].shape == (8, 8, 32)
+    unpacked = sq._unpack4(d["q4"])
+    assert unpacked.shape == w.shape
+    assert int(jnp.max(unpacked)) <= 7 and int(jnp.min(unpacked)) >= -8
+    scale = d["scale"].reshape(8, 1, 1)
+    rel = float(jnp.linalg.norm(unpacked * scale - w) / jnp.linalg.norm(w))
+    assert rel < 0.2, rel
