@@ -18,6 +18,7 @@ SECTIONS = [
     ("table6", "benchmarks.table6_haq_latency"),
     ("table7", "benchmarks.table7_transfer"),
     ("roofline", "benchmarks.roofline_report"),
+    ("engine", "benchmarks.bench_engine_throughput"),
 ]
 
 

@@ -1,35 +1,64 @@
-"""Serving launcher: batched prefill + decode with KV cache, greedy/temp
-sampling, optional HAQ quantization policy.
+"""Serving launcher — a thin CLI over the continuous-batching engine
+(serving/engine), with the sequential batched generate kept as the
+reference baseline for equivalence tests and throughput comparisons.
 
-``python -m repro.launch.serve --arch gemma2-2b --tiny --gen 32``
+``python -m repro.launch.serve --arch gemma2-2b --tiny --requests 8``
+``python -m repro.launch.serve --arch gemma2-2b --tiny --sequential``
 """
 from __future__ import annotations
 
 import argparse
 import json
 import time
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config, tiny_config
+from repro.core.hardware_model import HARDWARES
 from repro.core.quantization import make_quant_dot
 from repro.models.api import build_model
+from repro.serving.engine import Engine, Request, derive_policy
+
+# decode closures are cached per (cfg, dot) so repeated generate() calls —
+# one per request in the sequential baseline — reuse one jitted function
+# instead of retracing every call. Values hold the dot hook alive so id()
+# keys can't be recycled.
+_DECODE_JIT: Dict[Tuple, Tuple] = {}
+
+
+def _decode_fn(model, dot):
+    key = (model.cfg, None if dot is None else id(dot))
+    ent = _DECODE_JIT.get(key)
+    if ent is None:
+        fn = jax.jit(lambda p, c, t, pos: model.decode_step(p, c, t, pos,
+                                                            dot=dot))
+        ent = (fn, dot)
+        _DECODE_JIT[key] = ent
+    return ent[0]
 
 
 def generate(model, params, prompt_tokens, gen_len: int, *, temperature=0.0,
              dot=None, key=None):
-    """prompt (B, S) -> (B, S+gen_len). Grows the cache to S+gen_len."""
+    """prompt (B, S) -> (B, S+gen_len). Grows the cache to S+gen_len.
+
+    Sequential dense-cache baseline: one fixed batch, no admission — the
+    engine's continuous batching supersedes this for traffic; kept as the
+    exactness reference. Local-attention caches stay in chronological
+    ("full") layout rather than the ring layout: the summation order then
+    matches the engine's paged gather, keeping greedy outputs bit-
+    comparable past the window wrap (ring decode is covered by
+    tests/test_decode_equivalence.py)."""
     B, S = prompt_tokens.shape
     max_len = S + gen_len
-    cfg = model.cfg
 
-    logits, cache = model.prefill(params, {"tokens": prompt_tokens}, dot=dot)
+    logits, cache = model.prefill(params, {"tokens": prompt_tokens}, dot=dot,
+                                  cache_layout="full")
     cache = _grow_cache(model, cache, S, max_len)
 
-    decode = jax.jit(lambda p, c, t, pos: model.decode_step(p, c, t, pos,
-                                                            dot=dot))
+    decode = _decode_fn(model, dot)
     out = [prompt_tokens]
     tok = _sample(logits, temperature, key)
     for i in range(gen_len):
@@ -64,39 +93,93 @@ def _grow_cache(model, cache, cur: int, max_len: int):
     return jax.tree_util.tree_map_with_path(grow, cache)
 
 
+def _make_requests(args, cfg):
+    rng = np.random.default_rng(0)
+    reqs = []
+    lo = min(4, args.prompt_len)
+    for i in range(args.requests):
+        S = int(rng.integers(lo, args.prompt_len + 1))
+        prompt = rng.integers(2, cfg.vocab_size, S).astype(np.int32)
+        reqs.append(Request(rid=i, prompt=prompt, max_new=args.gen))
+    return reqs
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--tiny", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--hw", default="v5e-1chip", choices=sorted(HARDWARES))
+    ap.add_argument("--requests", type=int, default=8,
+                    help="engine mode: number of requests in the trace")
+    ap.add_argument("--batch", type=int, default=4,
+                    help="sequential mode: fixed batch size")
+    ap.add_argument("--max-batch", type=int, default=0,
+                    help="override the policy's max in-flight batch")
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--sequential", action="store_true",
+                    help="legacy fixed-batch loop instead of the engine")
     ap.add_argument("--quant-policy", default="",
-                    help="json file: {site: [w_bits, a_bits]}")
+                    help="json file: {site: [w_bits, a_bits]} "
+                         "(sequential mode only)")
     args = ap.parse_args()
+    if args.prompt_len < 1:
+        ap.error("--prompt-len must be >= 1")
+    if args.quant_policy and not args.sequential:
+        ap.error("--quant-policy applies to --sequential mode only; the "
+                 "engine derives its quantization from the admission policy")
 
     cfg = tiny_config(args.arch) if args.tiny else get_config(args.arch)
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    dot = None
-    if args.quant_policy:
-        policy = {k: tuple(v) for k, v in
-                  json.load(open(args.quant_policy)).items()}
-        dot = make_quant_dot(policy)
-        print(f"serving with quantization policy over {len(policy)} sites")
 
-    prompt = jnp.asarray(
-        np.random.default_rng(0).integers(
-            2, cfg.vocab_size, (args.batch, args.prompt_len)), jnp.int32)
+    if args.sequential:
+        dot = None
+        if args.quant_policy:
+            policy = {k: tuple(v) for k, v in
+                      json.load(open(args.quant_policy)).items()}
+            dot = make_quant_dot(policy)
+            print(f"serving with quantization policy over "
+                  f"{len(policy)} sites")
+        prompt = jnp.asarray(
+            np.random.default_rng(0).integers(
+                2, cfg.vocab_size, (args.batch, args.prompt_len)), jnp.int32)
+        t0 = time.time()
+        out = generate(model, params, prompt, args.gen,
+                       temperature=args.temperature,
+                       key=jax.random.PRNGKey(1)
+                       if args.temperature > 0 else None)
+        dt = time.time() - t0
+        print(f"{cfg.name}: generated {args.gen} tokens x batch "
+              f"{args.batch} in {dt:.2f}s "
+              f"({args.gen * args.batch / dt:.1f} tok/s)")
+        print("sample:",
+              np.asarray(out[0, args.prompt_len:args.prompt_len + 16]))
+        return
+
+    hw = HARDWARES[args.hw]
+    max_len = args.prompt_len + args.gen
+    policy = derive_policy(cfg, hw, max_model_len=max_len,
+                           param_bytes=model.param_bytes())
+    if args.max_batch:
+        import dataclasses
+        policy = dataclasses.replace(policy, max_batch=args.max_batch)
+    print(f"admission[{hw.name}]: max_batch={policy.max_batch} "
+          f"prefill_chunk={policy.prefill_chunk} "
+          f"quant={policy.quant_bits}b pages={policy.num_pages} "
+          f"(est decode {policy.est_decode_s * 1e3:.2f}ms/step)")
+    engine = Engine(model, params, policy, temperature=args.temperature)
+    reqs = _make_requests(args, cfg)
     t0 = time.time()
-    out = generate(model, params, prompt, args.gen,
-                   temperature=args.temperature,
-                   key=jax.random.PRNGKey(1) if args.temperature > 0 else None)
+    outs = engine.run(reqs)
     dt = time.time() - t0
-    print(f"{cfg.name}: generated {args.gen} tokens x batch {args.batch} "
-          f"in {dt:.2f}s ({args.gen * args.batch / dt:.1f} tok/s)")
-    print("sample:", np.asarray(out[0, args.prompt_len:args.prompt_len + 16]))
+    gen_total = engine.stats["decode_tokens"] + engine.stats["prefills"]
+    print(f"{cfg.name}: served {len(reqs)} requests, {gen_total} tokens in "
+          f"{dt:.2f}s ({gen_total / dt:.1f} tok/s, "
+          f"{engine.stats['decode_ticks']} decode ticks)")
+    first = outs[0]
+    print("sample:", first[len(reqs[0].prompt):len(reqs[0].prompt) + 16])
 
 
 if __name__ == "__main__":

@@ -46,11 +46,17 @@ class Model:
 
     # -- compute ------------------------------------------------------------
     def forward(self, params, batch, *, want_cache=False, remat=False,
-                ac=None, dot=None, unembed_mode="full"):
-        fwd = encdec.forward if self.cfg.is_encdec else transformer.forward
+                ac=None, dot=None, unembed_mode="full",
+                cache_layout="ring"):
         ac = ac or transformer._identity_ac
-        return fwd(params, batch, self.cfg, want_cache=want_cache,
-                   remat=remat, ac=ac, dot=dot, unembed_mode=unembed_mode)
+        if self.cfg.is_encdec:
+            return encdec.forward(params, batch, self.cfg,
+                                  want_cache=want_cache, remat=remat, ac=ac,
+                                  dot=dot, unembed_mode=unembed_mode)
+        return transformer.forward(params, batch, self.cfg,
+                                   want_cache=want_cache, remat=remat, ac=ac,
+                                   dot=dot, unembed_mode=unembed_mode,
+                                   cache_layout=cache_layout)
 
     def loss(self, params, batch, *, remat=False, ac=None, dot=None):
         hidden, _, aux, fmask = self.forward(params, batch, want_cache=False,
@@ -63,10 +69,12 @@ class Model:
         ce = transformer.chunked_ce(params, hidden, labels, self.cfg, dot=dot)
         return ce + 0.01 * aux
 
-    def prefill(self, params, batch, *, ac=None, dot=None):
+    def prefill(self, params, batch, *, ac=None, dot=None,
+                cache_layout="ring", unembed_mode="last"):
         logits, cache, _, _ = self.forward(params, batch, want_cache=True,
                                            ac=ac, dot=dot,
-                                           unembed_mode="last")
+                                           unembed_mode=unembed_mode,
+                                           cache_layout=cache_layout)
         return logits, cache
 
     def decode_step(self, params, cache, token, pos, *, ac=None, dot=None):
@@ -74,6 +82,19 @@ class Model:
             else transformer.decode_step
         ac = ac or transformer._identity_ac
         return step(params, cache, token, pos, self.cfg, ac=ac, dot=dot)
+
+    def unembed(self, params, hidden, *, dot=None):
+        """Project hidden states (B, S, D) to logits (decoder-only)."""
+        return transformer.unembed(params, hidden, self.cfg, dot=dot)
+
+    def decode_step_paged(self, params, pool, page_table, token, positions,
+                          *, ac=None, dot=None):
+        """Continuous-batching decode: per-sequence positions, KV gathered
+        through the page table (see serving/engine)."""
+        ac = ac or transformer._identity_ac
+        return transformer.decode_step_paged(params, pool, page_table, token,
+                                             positions, self.cfg, ac=ac,
+                                             dot=dot)
 
     # -- caches & inputs ----------------------------------------------------
     def cache_specs(self, batch: int, seq_len: int):
@@ -84,6 +105,13 @@ class Model:
     def init_cache(self, batch: int, seq_len: int):
         return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
                             self.cache_specs(batch, seq_len))
+
+    def pool_specs(self, num_pages: int, page_size: int):
+        return transformer.pool_specs(self.cfg, num_pages, page_size)
+
+    def init_pool(self, num_pages: int, page_size: int):
+        return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                            self.pool_specs(num_pages, page_size))
 
     def input_specs(self, shape) -> Dict[str, Any]:
         """ShapeDtypeStruct stand-ins for one step's inputs (dry-run)."""

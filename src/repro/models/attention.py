@@ -94,11 +94,14 @@ def local_mask(S: int, T: int, window: int, q_offset=0):
 
 
 def attention_fwd(p, x, kind: str, cfg, positions, *, dot=None,
-                  segment_ids=None) -> Tuple[jax.Array, dict]:
+                  segment_ids=None, ring: bool = True
+                  ) -> Tuple[jax.Array, dict]:
     """Training/prefill attention. Returns (out (B,S,D), cache_entry).
 
     kind: "global" | "local" | "bidir".
-    cache_entry holds roped k/v ready for decode (ring layout for local).
+    cache_entry holds roped k/v ready for decode (ring layout for local;
+    ``ring=False`` keeps local caches in chronological full layout so the
+    paged serving engine can copy them into its page pool).
     """
     B, S, D = x.shape
     q, k, v = qkv(p, x, cfg.rope_theta, positions, dot=dot)
@@ -120,7 +123,7 @@ def attention_fwd(p, x, kind: str, cfg, positions, *, dot=None,
         "bsnh,nhd->bsd", a, w))
     out = dot_o(o, p["wo"], "attn_o")
     cache = {"k": k, "v": v}
-    if kind == "local" and S >= W:
+    if ring and kind == "local" and S >= W:
         cache = {"k": _last_window_ring(k, W), "v": _last_window_ring(v, W)}
     return out, cache
 
@@ -176,6 +179,50 @@ def attention_decode(p, x, cache_k, cache_v, pos, kind: str, cfg, *,
         "bsnh,nhd->bsd", a, w))
     out = dot_o(o, p["wo"], "attn_o")
     return out, cache_k, cache_v
+
+
+def attention_decode_paged(p, x, pool_k, pool_v, page_table, positions,
+                           kind: str, cfg, *, dot=None, ac=None):
+    """Slot-indexed one-token decode against a paged KV pool.
+
+    x           (B, 1, D)   one new token's activations per sequence
+    pool_k/v    (P, page, K, hd)  this layer's physical page pool
+    page_table  (B, n_pages) int32 physical page ids per logical block;
+                unused tail entries must point at the scratch page 0
+    positions   (B,) int32  absolute position of the incoming token (== the
+                number of tokens already cached for that sequence)
+
+    The new k/v are scattered into page ``page_table[b, pos // page]`` at
+    slot ``pos % page``; attention then gathers each sequence's pages back
+    into chronological order and masks columns beyond ``positions[b]`` (and
+    outside the sliding window for local layers). Because RoPE is applied
+    at cache-write time with absolute positions, the gathered cache is
+    bit-identical to a dense chronological cache.
+
+    Returns (out (B,1,D), pool_k, pool_v).
+    """
+    B = x.shape[0]
+    page = pool_k.shape[1]
+    q, k_new, v_new = qkv(p, x, cfg.rope_theta, positions[:, None], dot=dot)
+    pids = jnp.take_along_axis(page_table, (positions // page)[:, None],
+                               axis=1)[:, 0]
+    slots = positions % page
+    pool_k = pool_k.at[pids, slots].set(k_new[:, 0],
+                                        mode="promise_in_bounds")
+    pool_v = pool_v.at[pids, slots].set(v_new[:, 0],
+                                        mode="promise_in_bounds")
+    k = pool_k[page_table].reshape((B, -1) + pool_k.shape[2:])
+    v = pool_v[page_table].reshape((B, -1) + pool_v.shape[2:])
+    T = k.shape[1]
+    j = jnp.arange(T)[None, :]
+    valid = j <= positions[:, None]
+    if kind == "local":
+        valid &= j > positions[:, None] - cfg.window_size
+    mask = valid[:, None, None, :]
+    o = _attend(q, k, v, mask, cfg.attn_softcap, ac=ac)
+    dot_o = dot or (lambda a, w, name: jnp.einsum(
+        "bsnh,nhd->bsd", a, w))
+    return dot_o(o, p["wo"], "attn_o"), pool_k, pool_v
 
 
 def cross_attention(p, x, mem_k, mem_v, cfg, *, dot=None) -> jax.Array:

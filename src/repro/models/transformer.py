@@ -122,10 +122,10 @@ def param_defs(cfg) -> dict:
 
 # ----------------------------------------------------------------- blocks ----
 def _dense_block_fwd(p, x, kind, cfg, positions, ac: Ac, dot=None,
-                     want_cache=True):
+                     want_cache=True, ring=True):
     h = rms_norm(x, p["ln1"], cfg.norm_eps)
     a, cache = attn.attention_fwd(p["attn"], h, kind["attn"], cfg, positions,
-                                  dot=dot)
+                                  dot=dot, ring=ring)
     if cfg.sandwich_norm:
         a = rms_norm(a, p["ln1_post"], cfg.norm_eps)
     x = ac(x + a, "resid")
@@ -138,7 +138,7 @@ def _dense_block_fwd(p, x, kind, cfg, positions, ac: Ac, dot=None,
     if cfg.sandwich_norm:
         f = rms_norm(f, p["ln2_post"], cfg.norm_eps)
     x = ac(x + f, "resid")
-    if want_cache and kind["attn"] == "local":
+    if want_cache and ring and kind["attn"] == "local":
         W = cfg.window_size
         cache = {"k": _to_ring(cache["k"], W), "v": _to_ring(cache["v"], W)}
     return x, (cache if want_cache else None), aux
@@ -265,13 +265,17 @@ def chunked_ce(params, hidden, labels, cfg, *, dot=None, chunk: int = 256,
 
 # --------------------------------------------------------------- forward ----
 def forward(params, batch, cfg, *, want_cache: bool, remat: bool = False,
-            ac: Ac = _identity_ac, dot=None, unembed_mode: str = "full"):
+            ac: Ac = _identity_ac, dot=None, unembed_mode: str = "full",
+            cache_layout: str = "ring"):
     """Full-sequence forward (training / prefill).
 
     unembed_mode: "full" -> logits (B,S,V); "last" -> logits (B,1,V) (prefill);
     "none" -> final hidden states (B,S,D) (training loss path).
+    cache_layout: "ring" -> local-attention caches in ring layout (dense
+    decode); "full" -> chronological full-length caches (paged engine).
     Returns (logits_or_hidden, caches or None, aux scalar, loss_mask).
     """
+    ring = cache_layout == "ring"
     x, loss_mask = _assemble_input(params, batch, cfg, ac)
     B, S, _ = x.shape
     positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
@@ -324,7 +328,7 @@ def forward(params, batch, cfg, *, want_cache: bool, remat: bool = False,
             for j in range(P):
                 h, outs[f"sub{j}"], aux_j = _dense_block_fwd(
                     xs[f"sub{j}"], h, kinds[j], cfg, positions, ac, dot=dot,
-                    want_cache=want_cache)
+                    want_cache=want_cache, ring=ring)
                 aux = aux + aux_j
             return (h, aux), (outs if want_cache else None)
 
@@ -406,6 +410,82 @@ def decode_step(params, cache, token, pos, cfg, *, ac: Ac = _identity_ac,
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)
     logits = unembed(params, x, cfg, dot=dot)
     return logits, new_cache
+
+
+# ----------------------------------------------------------- paged decode ----
+def _dense_block_decode_paged(p, x, pool_kv, page_table, positions, kind, cfg,
+                              dot=None, ac=None):
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    a, ck, cv = attn.attention_decode_paged(
+        p["attn"], h, pool_kv["k"], pool_kv["v"], page_table, positions,
+        kind["attn"], cfg, dot=dot, ac=ac)
+    if cfg.sandwich_norm:
+        a = rms_norm(a, p["ln1_post"], cfg.norm_eps)
+    x = x + a
+    h = rms_norm(x, p["ln2"], cfg.norm_eps)
+    if kind["moe"]:
+        f, _ = moe_lib.moe_apply(p["moe"], h, cfg.moe, cfg.activation,
+                                 dot=dot)
+    else:
+        f = ffn_apply(p["ffn"], h, cfg.activation, dot=dot)
+    if cfg.sandwich_norm:
+        f = rms_norm(f, p["ln2_post"], cfg.norm_eps)
+    return x + f, {"k": ck, "v": cv}
+
+
+def decode_step_paged(params, pool, page_table, token, positions, cfg, *,
+                      ac: Ac = _identity_ac, dot=None):
+    """Batched slot-indexed decode against a paged KV pool.
+
+    token (B,1) int32; positions (B,) int32 per-sequence absolute positions
+    (continuous batching: every batch slot may be at a different depth);
+    pool is the pytree from ``pool_specs`` and page_table (B, n_pages) maps
+    each sequence's logical blocks to physical pages (shared across layers).
+    Returns (logits (B,1,V), new_pool).
+    """
+    if cfg.family not in ("dense", "moe", "vlm"):
+        raise NotImplementedError(
+            f"paged decode supports attention-cache families only, "
+            f"got {cfg.family!r}")
+    x = embed_tokens(params, token, cfg)
+    P = period_of(cfg)
+    kinds = sublayer_kinds(cfg)
+
+    def group_body(h, xs):
+        blocks, pool_g = xs
+        new_g = {}
+        for j in range(P):
+            h, new_g[f"sub{j}"] = _dense_block_decode_paged(
+                blocks[f"sub{j}"], h, pool_g[f"sub{j}"], page_table,
+                positions, kinds[j], cfg, dot=dot, ac=ac)
+        return h, new_g
+
+    x, new_pool = jax.lax.scan(group_body, x, (params["blocks"], pool))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = unembed(params, x, cfg, dot=dot)
+    return logits, new_pool
+
+
+def pool_specs(cfg, num_pages: int, page_size: int):
+    """Abstract paged-KV-pool pytree: per sub-layer slot, k/v pools of shape
+    (n_groups, num_pages, page_size, K, hd). Page ids are shared across
+    layers — one logical page allocation covers every layer's pool. Local
+    (sliding-window) layers use the same full-length pages and are masked to
+    the window at attention time (per-layer window-trimmed pools are an open
+    item, see ROADMAP)."""
+    if cfg.family not in ("dense", "moe", "vlm"):
+        raise NotImplementedError(
+            f"paged KV pool supports attention-cache families only, "
+            f"got {cfg.family!r}")
+    hd = cfg.resolved_head_dim
+    K = cfg.num_kv_heads
+    P = period_of(cfg)
+    n_groups = cfg.num_layers // P
+    shape = (n_groups, num_pages, page_size, K, hd)
+    return {f"sub{j}": {
+        "k": jax.ShapeDtypeStruct(shape, jnp.bfloat16),
+        "v": jax.ShapeDtypeStruct(shape, jnp.bfloat16),
+    } for j in range(P)}
 
 
 # ------------------------------------------------------------ cache specs ----

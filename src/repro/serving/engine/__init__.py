@@ -1,0 +1,49 @@
+"""Continuous-batching serving engine with a paged KV-cache pool.
+
+This is the deployed counterpart of the paper's hardware-in-the-loop search:
+the same roofline simulator (`core/hardware_model.py`) that scores NAS/HAQ
+candidates at *search* time sizes the runtime at *serve* time — KV pool
+capacity from the target's HBM, max in-flight batch from the decode-latency
+roofline, prompt padding buckets from the prefill roofline, and a HAQ bit
+policy (via `serving/quant.py`) when the memory roofline demands it.
+
+Page-table layout
+-----------------
+The KV cache is a pool of fixed-size **pages** preallocated once per layer::
+
+    pool["sub{j}"]["k"|"v"] : (n_groups, num_pages, page_size, K, hd) bf16
+
+``num_pages`` and ``page_size`` are shared by every layer: a single logical
+page allocation covers all layers, so the allocator hands out one list of
+physical page ids per request and the per-layer pools index it identically
+(vLLM's layout, transposed into the repo's scan-stacked group convention).
+
+Each in-flight sequence owns ``ceil((prompt + max_new) / page_size)`` pages,
+reserved at admission so decode can never OOM mid-flight. The scheduler
+packs active sequences into a fixed-width batch; a decode tick calls
+``Model.decode_step_paged`` with:
+
+    page_table : (B, max_pages) int32 — physical page of logical block i;
+                 unused tails (and idle batch slots) point at the scratch
+                 page 0, which is never allocated to a request
+    positions  : (B,) int32 — per-sequence absolute position, so every slot
+                 can be at a different decode depth (continuous batching)
+
+Token ``pos`` of sequence ``b`` lives at page ``page_table[b, pos // page]``
+slot ``pos % page``. RoPE is applied at cache-write time with absolute
+positions, so gathering pages back into chronological order is bit-exact
+with the dense cache — the engine's greedy outputs are token-identical to
+the sequential `launch.serve.generate` baseline (asserted in
+tests/test_engine.py).
+
+Modules: `pool` (page allocator + device pool), `scheduler` (FIFO admission
+/ eviction / backfill bookkeeping), `admission` (roofline-derived policy),
+`engine` (the host loop tying them to the model).
+"""
+from repro.serving.engine.admission import AdmissionPolicy, derive_policy
+from repro.serving.engine.engine import Engine
+from repro.serving.engine.pool import PageAllocator, PagedKVPool
+from repro.serving.engine.scheduler import Request, Scheduler
+
+__all__ = ["AdmissionPolicy", "derive_policy", "Engine", "PageAllocator",
+           "PagedKVPool", "Request", "Scheduler"]

@@ -1,0 +1,164 @@
+"""Hardware-aware admission policy, derived from the TPU roofline simulator.
+
+`derive_policy` answers, per hardware target, the questions the scheduler
+must not answer by guessing:
+
+  * ``num_pages``   — how much KV the target's HBM holds after weights
+                      (the memory roofline; paper Fig. 4's y-intercept)
+  * ``max_batch``   — largest in-flight batch whose decode step still meets
+                      the latency SLO (decode is memory-bound on the edge
+                      chip, compute/collective-bound on pod slices)
+  * ``prefill_chunk`` — prompt padding bucket: the largest chunk whose
+                      prefill latency keeps the decode stall bounded, so
+                      interleaved prefill ticks don't starve decode
+  * ``quant_bits``  — 16 (bf16) unless weights + one sequence of KV exceed
+                      the HBM budget, in which case the HAQ default bit
+                      policy (serving/quant.py) is applied: 8, then 4
+
+All quantities come from `core/hardware_model.py` OpCosts — the same
+roofline that drives NAS/AMC/HAQ at search time, now queried at serve time.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.core import hardware_model as hwm
+
+
+@dataclasses.dataclass(frozen=True)
+class AdmissionPolicy:
+    hw_name: str
+    max_model_len: int
+    page_size: int
+    num_pages: int          # pages the target's HBM can hold (incl. scratch)
+    max_batch: int          # max in-flight sequences
+    prefill_chunk: int      # prompt padding bucket (tokens)
+    quant_bits: int         # 16 = bf16 weights; 8/4 = HAQ default bits
+    decode_slo_s: float
+    est_decode_s: float     # roofline decode-step latency at max_batch
+    est_prefill_s: float    # roofline prefill latency at prefill_chunk
+
+    @property
+    def pages_per_seq(self) -> int:
+        return -(-self.max_model_len // self.page_size)
+
+
+def kv_bytes_per_token(cfg) -> int:
+    """bf16 k+v bytes per cached token, across all layers."""
+    return cfg.num_layers * 2 * cfg.num_kv_heads * cfg.resolved_head_dim * 2
+
+
+def _ffn_latency(cfg, i: int, tokens: int, hw, tp: int, w_bits) -> float:
+    if cfg.is_moe_layer(i):
+        m = cfg.moe
+        return float(hwm.moe_cost(tokens, cfg.d_model, m.d_ff_expert,
+                                  m.num_experts, m.experts_per_token)
+                     .latency(hw, w_bits=w_bits))
+    return float(3.0 * hwm.linear_cost(tokens, cfg.d_model, cfg.d_ff, tp=tp)
+                 .latency(hw, w_bits=w_bits))
+
+
+def step_latency(cfg, batch: int, q_len: int, ctx: int, hw: hwm.Hardware,
+                 *, w_bits: int = 16) -> float:
+    """Roofline latency of one forward step (q_len=1 -> decode tick)."""
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    H, K = cfg.num_heads, cfg.num_kv_heads
+    tp = min(hw.chips, 16)
+    tokens = batch * q_len
+    decode = q_len == 1
+    t = 0.0
+    for i in range(cfg.num_layers):
+        kind = cfg.attn_pattern[i % len(cfg.attn_pattern)]
+        window = cfg.window_size if kind == "local" else 0
+        t += float(hwm.linear_cost(tokens, d, (H + 2 * K) * hd, tp=tp)
+                   .latency(hw, w_bits=w_bits))
+        t += float(hwm.attention_cost(batch, q_len, ctx, H, K, hd,
+                                      window=window, decode=decode)
+                   .latency(hw))
+        t += float(hwm.linear_cost(tokens, H * hd, d, tp=tp)
+                   .latency(hw, w_bits=w_bits))
+        t += _ffn_latency(cfg, i, tokens, hw, tp, w_bits)
+    t += float(hwm.linear_cost(tokens, d, cfg.padded_vocab, tp=tp)
+               .latency(hw, w_bits=w_bits))
+    return t
+
+
+def derive_policy(cfg, hw: hwm.Hardware, *, max_model_len: int,
+                  page_size: int = 16, decode_slo_s: float = 0.030,
+                  prefill_stall_factor: float = 4.0,
+                  hbm_util: float = 0.9,
+                  max_batch_cap: int = 1024,
+                  param_bytes: Optional[int] = None) -> AdmissionPolicy:
+    """Pick (num_pages, max_batch, prefill_chunk, quant_bits) for a target.
+
+    ``param_bytes`` defaults to the analytic bf16 weight footprint
+    (``cfg.param_count() * 2``); pass the exact value from
+    ``Model.param_bytes()`` when available.
+    """
+    if cfg.is_encdec or cfg.family not in ("dense", "moe", "vlm"):
+        raise NotImplementedError(
+            f"admission policy sizes attention KV pools; {cfg.name} "
+            f"(family={cfg.family!r}) is an open item (ROADMAP)")
+    if param_bytes is None:
+        param_bytes = cfg.param_count() * 2
+    hbm_total = hw.hbm_bytes * hw.chips * hbm_util
+    per_tok = kv_bytes_per_token(cfg)
+    one_seq_kv = per_tok * max_model_len
+
+    # HAQ escalation: shrink weights until weights + one sequence fit.
+    quant_bits = 16
+    for bits in (16, 8, 4):
+        if param_bytes * bits / 16.0 + one_seq_kv <= hbm_total:
+            quant_bits = bits
+            break
+    else:
+        raise ValueError(
+            f"{cfg.name} cannot fit on {hw.name}: weights at 4-bit plus one "
+            f"{max_model_len}-token sequence exceed "
+            f"{hbm_total / 2**30:.1f} GiB")
+
+    kv_budget = hbm_total - param_bytes * quant_bits / 16.0
+    page_bytes = page_size * per_tok
+    pages_per_seq = -(-max_model_len // page_size)
+    # floor at one full sequence: the quant check above guarantees weights +
+    # one_seq_kv fit, but page-granular rounding could otherwise leave the
+    # pool a partial page short of a max-length request, which the scheduler
+    # would wait on forever. Overshoot is < 2 pages (incl. scratch page 0).
+    num_pages = max(int(kv_budget // page_bytes), pages_per_seq) + 1
+    mem_batch = max((num_pages - 1) // pages_per_seq, 1)
+
+    # Decode-latency roofline: largest batch meeting the SLO (monotonic).
+    lo, hi = 1, max(min(mem_batch, max_batch_cap), 1)
+    if step_latency(cfg, hi, 1, max_model_len, hw,
+                    w_bits=quant_bits) <= decode_slo_s:
+        max_batch = hi
+    else:
+        while hi - lo > 1:
+            mid = (lo + hi) // 2
+            if step_latency(cfg, mid, 1, max_model_len, hw,
+                            w_bits=quant_bits) <= decode_slo_s:
+                lo = mid
+            else:
+                hi = mid
+        max_batch = lo
+    est_decode = step_latency(cfg, max_batch, 1, max_model_len, hw,
+                              w_bits=quant_bits)
+
+    # Prefill bucket: largest power-of-two chunk whose prefill keeps the
+    # decode stall within prefill_stall_factor SLOs.
+    stall_budget = prefill_stall_factor * decode_slo_s
+    chunk = 16
+    c = 16
+    while c * 2 <= max_model_len:
+        c *= 2
+        if step_latency(cfg, 1, c, c, hw, w_bits=quant_bits) > stall_budget:
+            break
+        chunk = c
+    est_prefill = step_latency(cfg, 1, chunk, chunk, hw, w_bits=quant_bits)
+
+    return AdmissionPolicy(
+        hw_name=hw.name, max_model_len=max_model_len, page_size=page_size,
+        num_pages=num_pages, max_batch=max_batch, prefill_chunk=chunk,
+        quant_bits=quant_bits, decode_slo_s=decode_slo_s,
+        est_decode_s=est_decode, est_prefill_s=est_prefill)

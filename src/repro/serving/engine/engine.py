@@ -1,0 +1,186 @@
+"""The serving engine: ties model, paged pool, and scheduler into a host
+loop of interleaved prefill and decode ticks.
+
+One ``step()``:
+  1. admission — backfill free batch slots from the FIFO queue (page-
+     and slot-gated, see scheduler.py), running each admitted request's
+     prefill (prompt padded to the policy's roofline-derived bucket) and
+     scattering its KV into the request's pages;
+  2. decode tick — one batched ``decode_step_paged`` over all active slots
+     (idle slots ride along against the scratch page and are ignored);
+  3. eviction — finished sequences free their pages/slot immediately, so
+     the next step's admission backfills mid-flight.
+
+The decode closure is jitted ONCE per engine (fixed shapes: the policy's
+max_batch and page-table width), and prefill is jitted per padding bucket —
+no per-request retracing. When the policy's memory roofline demanded it,
+weights are HAQ-quantized (serving/quant.py) and the dequantizing ``dot``
+is threaded through both paths.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serving.engine.admission import AdmissionPolicy
+from repro.serving.engine.pool import PagedKVPool, quiet_donation
+from repro.serving.engine.scheduler import ActiveSeq, Request, Scheduler
+from repro.serving import quant as squant
+
+
+def sample_token(logits_row, temperature: float, key) -> int:
+    """One token from a (V,) f32 logits row (host array on the greedy path —
+    np.argmax ties break first-max, same as the baseline's jnp.argmax)."""
+    if temperature <= 0.0 or key is None:
+        return int(np.argmax(logits_row))
+    return int(jax.random.categorical(key, jnp.asarray(logits_row)
+                                      / temperature))
+
+
+class Engine:
+    def __init__(self, model, params, policy: AdmissionPolicy, *,
+                 temperature: float = 0.0, seed: int = 0, dot=None):
+        cfg = model.cfg
+        if cfg.is_encdec or cfg.family not in ("dense", "moe") \
+                or cfg.frontend != "none":
+            raise NotImplementedError(
+                f"engine serves decoder-only attention-cache LMs; "
+                f"{cfg.name} (family={cfg.family!r}, "
+                f"frontend={cfg.frontend!r}) is an open item (ROADMAP)")
+        self.model = model
+        self.policy = policy
+        self.temperature = temperature
+        self._key = jax.random.PRNGKey(seed) if temperature > 0 else None
+
+        if policy.quant_bits < 16:
+            params = squant.quantize_params(
+                params, default_bits=policy.quant_bits)
+            assert dot is None, "quant policy supplies its own dot hook"
+            dot = squant.dequant_dot
+        self.params = params
+
+        # Allocate only the pages max_batch concurrent sequences can use,
+        # capped by what the target's HBM holds (policy.num_pages).
+        needed = policy.max_batch * policy.pages_per_seq + 1
+        num_pages = min(policy.num_pages, needed)
+        self.kv = PagedKVPool(model, num_pages, policy.page_size)
+        self.scheduler = Scheduler(self.kv.allocator, policy.max_batch,
+                                   policy.max_model_len)
+
+        # jit once: fixed (max_batch, pages_per_seq) shapes for decode;
+        # prefill compiles per padding bucket. The pool is donated so decode
+        # ticks update it in place instead of double-buffering it.
+        self._decode = jax.jit(
+            lambda p, pool, pt, tok, pos: model.decode_step_paged(
+                p, pool, pt, tok, pos, dot=dot),
+            donate_argnums=(1,))
+
+        def prefill_fn(p, toks, last_idx):
+            # unembed only the last real prompt position — the prompt is
+            # padded to the bucket, so a full (B, Sp, V) unembed would be
+            # bucket/1 overcompute per admission.
+            hidden, cache, _, _ = model.forward(
+                p, {"tokens": toks}, want_cache=True, unembed_mode="none",
+                cache_layout="full", dot=dot)
+            h = jnp.take_along_axis(hidden, last_idx.reshape(1, 1, 1),
+                                    axis=1)
+            return model.unembed(p, h, dot=dot), cache
+
+        self._prefill = jax.jit(prefill_fn)
+        self.stats = {"decode_ticks": 0, "decode_tokens": 0,
+                      "prefills": 0, "admitted": 0}
+        self._outputs: Dict[int, np.ndarray] = {}
+
+    # ------------------------------------------------------------- intake --
+    def submit(self, req: Request) -> None:
+        self.scheduler.submit(req)
+
+    # --------------------------------------------------------------- step --
+    def step(self, now: float = float("inf")) -> List[int]:
+        """One scheduler tick: admit + prefill, then one batched decode.
+        Returns the rids that finished during this step."""
+        finished: List[ActiveSeq] = []
+        for seq in self.scheduler.admit(now):
+            self.stats["admitted"] += 1
+            self._run_prefill(seq)
+            if seq.is_done():
+                finished.append(seq)
+        live = [s for s in self.scheduler.active.values()
+                if s not in finished]
+        if live:
+            self._decode_tick(live, finished)
+        out = []
+        for seq in finished:
+            self.scheduler.release(seq)
+            self._outputs[seq.req.rid] = np.concatenate(
+                [np.asarray(seq.req.prompt, np.int32),
+                 np.asarray(seq.generated, np.int32)])
+            out.append(seq.req.rid)
+        return out
+
+    def _run_prefill(self, seq: ActiveSeq) -> None:
+        prompt = np.asarray(seq.req.prompt, np.int32)
+        S = len(prompt)
+        chunk = self.policy.prefill_chunk
+        Sp = -(-S // chunk) * chunk
+        toks = np.zeros((1, Sp), np.int32)
+        toks[0, :S] = prompt
+        logits, cache = self._prefill(self.params, jnp.asarray(toks),
+                                      jnp.asarray(S - 1, jnp.int32))
+        self.kv.write_prefill(cache, seq.pages)
+        self.stats["prefills"] += 1
+        tok = sample_token(np.asarray(logits[0, 0]), self.temperature,
+                           self._step_key(seq))
+        seq.generated.append(tok)
+        seq.pos = S
+
+    def _decode_tick(self, live: List[ActiveSeq],
+                     finished: List[ActiveSeq]) -> None:
+        B = self.policy.max_batch
+        maxp = self.policy.pages_per_seq
+        tokens = np.zeros((B, 1), np.int32)
+        positions = np.zeros((B,), np.int32)
+        pt = np.zeros((B, maxp), np.int32)       # 0 -> scratch page
+        for seq in live:
+            tokens[seq.slot, 0] = seq.last_token
+            positions[seq.slot] = seq.pos
+            pt[seq.slot, :len(seq.pages)] = seq.pages
+        with quiet_donation():
+            logits, self.kv.pool = self._decode(
+                self.params, self.kv.pool, jnp.asarray(pt),
+                jnp.asarray(tokens), jnp.asarray(positions))
+        self.stats["decode_ticks"] += 1
+        rows = np.asarray(logits[:, 0])      # one host transfer per tick
+        for seq in live:
+            tok = sample_token(rows[seq.slot], self.temperature,
+                               self._step_key(seq))
+            seq.generated.append(tok)
+            seq.pos += 1
+            self.stats["decode_tokens"] += 1
+            if seq.is_done():
+                finished.append(seq)
+
+    def _step_key(self, seq: ActiveSeq):
+        if self._key is None:
+            return None
+        k = jax.random.fold_in(self._key, seq.req.rid)
+        return jax.random.fold_in(k, len(seq.generated))
+
+    # ---------------------------------------------------------------- run --
+    def run(self, requests: List[Request], *,
+            realtime: bool = False) -> Dict[int, np.ndarray]:
+        """Serve a trace to completion. With ``realtime=True`` requests are
+        admitted no earlier than their ``arrival`` offset (wall clock);
+        otherwise arrivals are ignored (burst)."""
+        for r in requests:
+            self.submit(r)
+        t0 = time.monotonic()
+        while self.scheduler.has_work():
+            now = (time.monotonic() - t0) if realtime else float("inf")
+            if not self.step(now) and not self.scheduler.active:
+                time.sleep(1e-4)             # waiting on future arrivals
+        return {r.rid: self._outputs[r.rid] for r in requests}

@@ -1,0 +1,107 @@
+"""Paged KV-cache pool: host-side page allocator + device-side pool arrays.
+
+The allocator is plain Python (a free list) — allocation decisions are
+control flow, not compute, and stay off the device. The device pool is the
+pytree from ``Model.pool_specs``; page 0 is reserved as scratch: idle batch
+slots and unused page-table tails write/gather there, so scatters never need
+masking inside the jitted decode step.
+"""
+from __future__ import annotations
+
+import contextlib
+import warnings
+from collections import deque
+from typing import List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@contextlib.contextmanager
+def quiet_donation():
+    """Silence JAX's unused-donation warning around the engine's own donated
+    dispatches only: CPU ignores buffer donation, and process-wide filtering
+    would hide genuine missed-donation regressions elsewhere."""
+    with warnings.catch_warnings():
+        warnings.filterwarnings(
+            "ignore", message="Some donated buffers were not usable")
+        yield
+
+
+class PageAllocator:
+    """Free-list allocator over ``num_pages`` physical pages (page 0 is the
+    scratch page and is never handed out)."""
+
+    def __init__(self, num_pages: int, page_size: int):
+        if num_pages < 2:
+            raise ValueError("need >= 2 pages (page 0 is scratch)")
+        self.num_pages = num_pages
+        self.page_size = page_size
+        self._free: deque = deque(range(1, num_pages))
+
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    def pages_for(self, n_tokens: int) -> int:
+        return -(-n_tokens // self.page_size)
+
+    def alloc(self, n: int) -> Optional[List[int]]:
+        """Reserve n pages, or None if the pool can't satisfy the request."""
+        if n > len(self._free):
+            return None
+        return [self._free.popleft() for _ in range(n)]
+
+    def free(self, pages: Sequence[int]) -> None:
+        for p in pages:
+            if not 1 <= p < self.num_pages:
+                raise ValueError(f"freeing invalid page {p}")
+        self._free.extend(pages)
+
+
+class PagedKVPool:
+    """Device pool arrays + the allocator that tracks their occupancy."""
+
+    def __init__(self, model, num_pages: int, page_size: int):
+        self.allocator = PageAllocator(num_pages, page_size)
+        self.page_size = page_size
+        self.pool = model.init_pool(num_pages, page_size)
+        self._write_jit = {}        # (n_pages, cache_len) -> jitted writer
+
+    @property
+    def num_free(self) -> int:
+        return self.allocator.num_free
+
+    def write_prefill(self, cache, pages: Sequence[int]) -> None:
+        """Scatter one request's prefill cache (full layout, B=1, bucket-
+        padded length) into its pages. Jitted per (n_pages, cache_len) shape
+        with the pool donated, so the write is an in-place scatter rather
+        than a full-pool copy per admission. Bucket-padding garbage beyond
+        the true prompt lands only inside the request's own pages and is
+        masked (j <= pos) or overwritten by decode."""
+        n = len(pages)
+        page = self.page_size
+        Sp = jax.tree.leaves(cache)[0].shape[2]
+        span = n * page
+
+        key = (n, Sp)
+        fn = self._write_jit.get(key)
+        if fn is None:
+            def write(pool, cache, idx):
+                def wr(pool_leaf, cache_leaf):
+                    c = cache_leaf[:, 0]                # (G, Sp, K, hd)
+                    if Sp >= span:
+                        c = c[:, :span]
+                    else:
+                        c = jnp.pad(c, ((0, 0), (0, span - Sp))
+                                    + ((0, 0),) * (c.ndim - 2))
+                    c = c.reshape(c.shape[0], n, page, *c.shape[2:])
+                    return pool_leaf.at[:, idx].set(c)
+                return jax.tree.map(wr, pool, cache)
+            fn = jax.jit(write, donate_argnums=(0,))
+            self._write_jit[key] = fn
+
+        with quiet_donation():
+            self.pool = fn(self.pool, cache,
+                           jnp.asarray(np.asarray(pages, np.int32)))

@@ -1,0 +1,110 @@
+"""Continuous-batching scheduler: FIFO admission, eviction, backfill.
+
+Pure host-side bookkeeping (no jax) so the policy is unit-testable without
+a model. The scheduler owns batch slots and, via the page allocator, KV
+pages; the engine owns the device arrays.
+
+Admission reserves every page a request can ever need
+(``ceil((prompt + max_new) / page_size)``) up front, so an admitted
+sequence can never OOM mid-flight and eviction is only ever voluntary
+(finished / EOS). Head-of-line FIFO: if the front request doesn't fit, we
+wait for an eviction rather than skip it (starvation-free). Dynamic page
+allocation with preemption is an open item (ROADMAP).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.serving.engine.pool import PageAllocator
+
+
+@dataclasses.dataclass(eq=False)
+class Request:
+    rid: int
+    prompt: np.ndarray           # (S,) int32 token ids
+    max_new: int                 # tokens to generate (>= 1)
+    eos_id: Optional[int] = None
+    arrival: float = 0.0         # seconds since trace start
+
+
+@dataclasses.dataclass(eq=False)
+class ActiveSeq:
+    req: Request
+    slot: int
+    pages: List[int]
+    pos: int = 0                 # tokens currently cached
+    generated: List[int] = dataclasses.field(default_factory=list)
+
+    @property
+    def last_token(self) -> int:
+        return self.generated[-1]
+
+    def is_done(self) -> bool:
+        if len(self.generated) >= self.req.max_new:
+            return True
+        eos = self.req.eos_id
+        return eos is not None and self.generated and \
+            self.generated[-1] == eos
+
+
+class Scheduler:
+    def __init__(self, allocator: PageAllocator, max_batch: int,
+                 max_model_len: int):
+        self.allocator = allocator
+        self.max_batch = max_batch
+        self.max_model_len = max_model_len
+        self.queue: deque = deque()
+        self.active: Dict[int, ActiveSeq] = {}     # slot -> seq
+        self._free_slots = list(reversed(range(max_batch)))
+
+    # ---------------------------------------------------------- lifecycle --
+    def submit(self, req: Request) -> None:
+        total = len(req.prompt) + req.max_new
+        if total > self.max_model_len:
+            raise ValueError(
+                f"request {req.rid}: prompt+max_new={total} exceeds "
+                f"max_model_len={self.max_model_len}")
+        self.queue.append(req)
+
+    def admit(self, now: float = float("inf")) -> List[ActiveSeq]:
+        """Admit FIFO-front requests while a batch slot and enough pages for
+        the request's full lifetime are available. Returns newly admitted
+        sequences (prefill still pending — the engine runs it)."""
+        admitted = []
+        while self.queue and self._free_slots:
+            req = self.queue[0]
+            if req.arrival > now:
+                break
+            n = self.allocator.pages_for(len(req.prompt) + req.max_new)
+            pages = self.allocator.alloc(n)
+            if pages is None:
+                break                       # wait for an eviction (FIFO)
+            self.queue.popleft()
+            slot = self._free_slots.pop()
+            seq = ActiveSeq(req=req, slot=slot, pages=pages)
+            self.active[slot] = seq
+            admitted.append(seq)
+        return admitted
+
+    def release(self, seq: ActiveSeq) -> None:
+        """Evict a finished sequence: free its pages and batch slot so the
+        next admit() can backfill mid-flight."""
+        del self.active[seq.slot]
+        self.allocator.free(seq.pages)
+        self._free_slots.append(seq.slot)
+
+    # -------------------------------------------------------------- state --
+    @property
+    def num_active(self) -> int:
+        return len(self.active)
+
+    @property
+    def num_queued(self) -> int:
+        return len(self.queue)
+
+    def has_work(self) -> bool:
+        return bool(self.queue or self.active)
