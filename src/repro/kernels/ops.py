@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import flash_attention as fa
+from repro.kernels import paged_attention as pa
 from repro.kernels import quant_matmul as qmm
 from repro.kernels import ref
 
@@ -101,4 +102,24 @@ def flash_attention(q, k, v, *, causal=True, window=0, cap=0.0,
     """Pallas flash attention forward (serving path)."""
     return fa.flash_attention_fwd(q, k, v, causal=causal, window=window,
                                   cap=cap, bq=bq, bkv=bkv,
+                                  interpret=_interpret())
+
+
+def paged_attention(q, pool_k, pool_v, page_table, positions, *,
+                    window=0, cap=0.0, mode: str = "auto") -> jax.Array:
+    """Paged-attention decode: q (B,H,hd) against the page pool.
+
+    mode: "auto" -> Pallas kernel on TPU, pure-JAX block walk elsewhere;
+    "pallas" forces the kernel (interpret mode off-TPU — slow, tests only);
+    "ref" forces the block walk. Both walk pages and never materialize the
+    dense chronological KV view."""
+    if mode == "auto":
+        mode = "ref" if _interpret() else "pallas"
+    if mode == "ref":
+        return ref.paged_attention_ref(q, pool_k, pool_v, page_table,
+                                       positions, window=window, cap=cap)
+    if mode != "pallas":
+        raise ValueError(f"unknown paged-attention mode {mode!r}")
+    return pa.paged_attention_fwd(q, pool_k, pool_v, page_table, positions,
+                                  window=window, cap=cap,
                                   interpret=_interpret())

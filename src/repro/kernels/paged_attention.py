@@ -1,0 +1,146 @@
+"""Pallas TPU kernel: paged-attention decode (serving decode hot-spot).
+
+One query token per sequence attends to its KV history stored in a paged
+pool — the kernel walks ``page_table[b]`` block-by-block with an online
+softmax (flash-style running max/sum, like kernels/flash_attention.py),
+fusing the page gather, the causal/local-window mask, and the attention
+itself, so the dense chronological ``(B, n_blocks*page, K, hd)`` KV view is
+never materialized in HBM.
+
+Layout: the pool keeps its serving layout ``(num_pages, page, K, hd)``;
+``page_table``/``positions`` ride in as scalar-prefetch operands
+(``PrefetchScalarGridSpec``) so the kv BlockSpec index map can resolve
+logical block ``i`` of sequence ``b`` to physical page ``page_table[b, i]``
+before the DMA is issued. Grid is ``(B, K, n_blocks)`` — the block axis is
+innermost, so the fp32 (m, l, acc) VMEM scratch carries across a sequence's
+page walk and the output tile is written once on the final block.
+
+Blocks a sequence does not need — past ``positions[b]`` or, for local
+layers, wholly below the window — are skipped: the index map clamps their
+page id onto an already-resident page (no new copy is pipelined in) and
+``pl.when`` predication skips the FLOPs. That makes local-window walks
+O(window), not O(T) — the roofline win the admission policy already
+assumes.
+
+Forward-only by design (decode). Validated against the dense oracle in
+tests/test_kernels.py (interpret mode); the pure-JAX block-walk twin used
+as the CPU fallback lives in kernels/ref.py::paged_attention_ref.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+F32 = jnp.float32
+NEG = -1e30
+LANES = 128  # scratch minor dim, aligned to the VPU lane width
+
+
+def _paged_kernel(pt_ref, pos_ref, q_ref, k_ref, v_ref, o_ref,
+                  m_ref, l_ref, acc_ref, *, page, G, hd, window, cap, scale,
+                  n_blocks):
+    # q_ref: (1, 1, G, hd) the G query heads of this (batch, kv-head) pair
+    # k_ref/v_ref: (1, page, 1, hd) one physical page of this kv head
+    b = pl.program_id(0)
+    i = pl.program_id(2)
+    pos = pos_ref[b]
+    hi = pos // page                       # last block holding a live token
+    if window:
+        lo = jnp.maximum((pos - window + 1) // page, 0)
+    else:
+        lo = 0
+
+    @pl.when(i == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when((i >= lo) & (i <= hi))
+    def _block():
+        q = q_ref[...].reshape(G, hd).astype(F32) * scale
+        k = k_ref[...].reshape(page, hd).astype(F32)
+        v = v_ref[...].reshape(page, hd).astype(F32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=F32)    # (G, page)
+        if cap:
+            s = cap * jnp.tanh(s / cap)
+        kpos = i * page + jax.lax.broadcasted_iota(jnp.int32, (G, page), 1)
+        valid = kpos <= pos
+        if window:
+            valid &= kpos > pos - window
+        s = jnp.where(valid, s, NEG)
+
+        m_prev = m_ref[:, :1]                                  # (G, 1)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        corr = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+        l_ref[...] = l_ref[...] * corr \
+            + jnp.broadcast_to(jnp.sum(p, axis=-1, keepdims=True),
+                               l_ref.shape)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=F32)
+
+    @pl.when(i == n_blocks - 1)
+    def _finalize():
+        out = acc_ref[...] / jnp.maximum(l_ref[:, :1], 1e-30)
+        o_ref[...] = out.reshape(o_ref.shape).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "cap", "interpret"))
+def paged_attention_fwd(q, pool_k, pool_v, page_table, positions, *,
+                        window=0, cap=0.0, interpret=False):
+    """q (B,H,hd); pool_k/v (P, page, K, hd); page_table (B, n_blocks) int32
+    (unused tails -> scratch page 0); positions (B,) int32. H = K*G.
+    Returns (B, H, hd) in q.dtype."""
+    B, H, hd = q.shape
+    _, page, K, _ = pool_k.shape
+    G = H // K
+    n_blocks = page_table.shape[1]
+    scale = hd ** -0.5
+    qr = q.reshape(B, K, G, hd)
+
+    kernel = functools.partial(_paged_kernel, page=page, G=G, hd=hd,
+                               window=window, cap=cap, scale=scale,
+                               n_blocks=n_blocks)
+
+    def kv_map(b, k, i, pt, pos):
+        # clamp skipped blocks onto an in-range (already fetched) page so no
+        # fresh DMA is pipelined for them; pl.when skips their compute.
+        p = pos[b]
+        hi = p // page
+        if window:
+            lo = jnp.maximum((p - window + 1) // page, 0)
+            ic = jnp.clip(i, lo, hi)
+        else:
+            ic = jnp.minimum(i, hi)
+        return (pt[b, ic], 0, k, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, K, n_blocks),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, hd), lambda b, k, i, pt, pos: (b, k, 0, 0)),
+            pl.BlockSpec((1, page, 1, hd), kv_map),
+            pl.BlockSpec((1, page, 1, hd), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, hd),
+                               lambda b, k, i, pt, pos: (b, k, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, LANES), F32),    # running max m
+            pltpu.VMEM((G, LANES), F32),    # running sum l
+            pltpu.VMEM((G, hd), F32),       # output accumulator
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, K, G, hd), q.dtype),
+        interpret=interpret,
+    )(page_table, positions, qr, pool_k, pool_v)
+    return out.reshape(B, H, hd)

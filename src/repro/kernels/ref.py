@@ -71,6 +71,93 @@ def quant_matmul_w8a8(x_q: jax.Array, x_scale: jax.Array, w_q: jax.Array,
     return (acc.astype(F32) * x_scale * w_scale[None, :]).astype(out_dtype)
 
 
+# ------------------------------------------------------ paged attention ----
+def paged_attention_ref(q, pool_k, pool_v, page_table, positions, *,
+                        window=0, cap=0.0):
+    """Block-walking paged decode attention (the CPU serving fallback and
+    the semantics oracle for kernels/paged_attention.py).
+
+    q (B, H, hd) one query token per sequence; pool_k/v (P, page, K, hd);
+    page_table (B, n_blocks) int32, unused tails pointing at scratch page 0;
+    positions (B,) int32 absolute position of the query token (== index of
+    the newest cached token). H = K*G (GQA).
+
+    Walks each sequence's pages with `lax.fori_loop` over the data-dependent
+    block range — ``[min(pos-window+1), max(pos)]`` across the batch — so
+    the dense chronological (B, n_blocks*page, K, hd) KV view is never
+    built and local-window layers do window-trimmed walks instead of
+    full-length masking. Scores are staged per-block into a (B,K,G,T) fp32
+    buffer so the softmax itself is a single full-row pass, matching the
+    dense path's normalization exactly.
+    """
+    B, H, hd = q.shape
+    _, page, K, _ = pool_k.shape
+    G = H // K
+    n_blocks = page_table.shape[1]
+    T = n_blocks * page
+    scale = hd ** -0.5
+    NEG = -2.0 ** 30
+    qf = q.astype(F32).reshape(B, K, G, hd)
+
+    hi = jnp.max(positions) // page + 1            # blocks any sequence needs
+    if window:
+        lo = jnp.maximum((jnp.min(positions) - window + 1) // page, 0)
+    else:
+        lo = jnp.zeros((), jnp.int32)
+
+    def score_block(i, s_buf):
+        kb = pool_k[page_table[:, i]].astype(F32)          # (B, page, K, hd)
+        s = jnp.einsum("bkgd,bpkd->bkgp", qf, kb) * scale
+        if cap:
+            s = cap * jnp.tanh(s / cap)
+        kpos = i * page + jnp.arange(page)
+        valid = kpos[None, :] <= positions[:, None]
+        if window:
+            valid &= kpos[None, :] > positions[:, None] - window
+        s = jnp.where(valid[:, None, None, :], s, NEG)
+        return jax.lax.dynamic_update_slice(s_buf, s, (0, 0, 0, i * page))
+
+    s_buf = jnp.full((B, K, G, T), NEG, F32)
+    s_buf = jax.lax.fori_loop(lo, hi, score_block, s_buf)
+    w = jax.nn.softmax(s_buf, axis=-1)
+
+    def pv_block(i, acc):
+        vb = pool_v[page_table[:, i]].astype(F32)
+        wb = jax.lax.dynamic_slice(w, (0, 0, 0, i * page), (B, K, G, page))
+        return acc + jnp.einsum("bkgp,bpkd->bkgd", wb, vb)
+
+    o = jax.lax.fori_loop(lo, hi, pv_block, jnp.zeros((B, K, G, hd), F32))
+    return o.reshape(B, H, hd).astype(q.dtype)
+
+
+def paged_attention_dense_ref(q, pool_k, pool_v, page_table, positions, *,
+                              window=0, cap=0.0):
+    """Dense oracle: gather pages chronologically, mask, softmax. Test-only —
+    this materializes exactly the (B, T, K, hd) view the kernel exists to
+    avoid."""
+    B, H, hd = q.shape
+    K = pool_k.shape[2]
+    k = pool_k[page_table].reshape(B, -1, K, hd)
+    v = pool_v[page_table].reshape(B, -1, K, hd)
+    T = k.shape[1]
+    G = H // K
+    if G > 1:
+        k = jnp.repeat(k, G, axis=2)
+        v = jnp.repeat(v, G, axis=2)
+    s = jnp.einsum("bhd,bkhd->bhk", q.astype(F32), k.astype(F32))
+    s = s * (hd ** -0.5)
+    if cap:
+        s = cap * jnp.tanh(s / cap)
+    j = jnp.arange(T)[None, :]
+    valid = j <= positions[:, None]
+    if window:
+        valid &= j > positions[:, None] - window
+    s = jnp.where(valid[:, None, :], s, -2.0 ** 30)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhk,bkhd->bhd", w, v.astype(F32))
+    return out.astype(q.dtype)
+
+
 # ------------------------------------------------------ flash attention ----
 def flash_attention_ref(q, k, v, *, causal=True, window=0, cap=0.0):
     """Dense attention oracle. q (B,S,H,hd), k/v (B,T,K,hd) GQA."""

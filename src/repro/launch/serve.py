@@ -21,6 +21,7 @@ from repro.core.hardware_model import HARDWARES
 from repro.core.quantization import make_quant_dot
 from repro.models.api import build_model
 from repro.serving.engine import Engine, Request, derive_policy
+from repro.serving.engine.pool import quiet_donation
 
 # decode closures are cached per (cfg, dot) so repeated generate() calls —
 # one per request in the sequential baseline — reuse one jitted function
@@ -29,60 +30,93 @@ from repro.serving.engine import Engine, Request, derive_policy
 _DECODE_JIT: Dict[Tuple, Tuple] = {}
 
 
-def _decode_fn(model, dot):
-    key = (model.cfg, None if dot is None else id(dot))
+def _decode_fn(model, dot, kernel="auto"):
+    paged = model.cfg.family in ("dense", "moe", "vlm") \
+        and not model.cfg.is_encdec
+    key = (model.cfg, None if dot is None else id(dot), paged, kernel)
     ent = _DECODE_JIT.get(key)
     if ent is None:
-        fn = jax.jit(lambda p, c, t, pos: model.decode_step(p, c, t, pos,
-                                                            dot=dot))
+        if paged:
+            fn = jax.jit(lambda p, pool, pt, t, pos: model.decode_step_paged(
+                p, pool, pt, t, pos, dot=dot, kernel=kernel),
+                donate_argnums=(1,))
+        else:
+            fn = jax.jit(lambda p, c, t, pos: model.decode_step(p, c, t, pos,
+                                                                dot=dot))
         ent = (fn, dot)
         _DECODE_JIT[key] = ent
-    return ent[0]
+    return ent[0], paged
+
+
+def _identity_paged_pool(cache, B: int, max_len: int, page: int):
+    """Scatter a full-layout prefill cache into a fresh identity-mapped page
+    pool: sequence b's logical block i lives at physical page 1 + b*ppseq
+    + i (page 0 stays the scratch page, as in the engine)."""
+    ppseq = -(-max_len // page)
+    span = ppseq * page
+    pt = np.arange(B * ppseq, dtype=np.int32).reshape(B, ppseq) + 1
+
+    def to_pages(c):                     # (G, B, S, K, hd) full layout
+        pad = [(0, 0)] * c.ndim
+        pad[2] = (0, span - c.shape[2])
+        c = jnp.pad(c, pad)
+        c = c.reshape(c.shape[0], B * ppseq, page, *c.shape[3:])
+        pool = jnp.zeros((c.shape[0], B * ppseq + 1) + c.shape[2:], c.dtype)
+        return pool.at[:, 1:].set(c)
+
+    return jax.tree.map(to_pages, cache), jnp.asarray(pt)
 
 
 def generate(model, params, prompt_tokens, gen_len: int, *, temperature=0.0,
-             dot=None, key=None):
-    """prompt (B, S) -> (B, S+gen_len). Grows the cache to S+gen_len.
+             dot=None, key=None, page_size: int = 16, kernel: str = "auto"):
+    """prompt (B, S) -> (B, S+gen_len).
 
-    Sequential dense-cache baseline: one fixed batch, no admission — the
-    engine's continuous batching supersedes this for traffic; kept as the
-    exactness reference. Local-attention caches stay in chronological
-    ("full") layout rather than the ring layout: the summation order then
-    matches the engine's paged gather, keeping greedy outputs bit-
-    comparable past the window wrap (ring decode is covered by
-    tests/test_decode_equivalence.py)."""
+    Sequential baseline: one fixed batch, no admission — the engine's
+    continuous batching supersedes this for traffic; kept as the exactness
+    reference. Decode runs the same paged-attention walk as the engine over
+    an identity page table (block i of sequence b at page 1 + b*ppseq + i,
+    ``page_size`` matching the default admission policy), so the reduction
+    order — and therefore every greedy token — is bit-comparable with the
+    engine regardless of batch composition, growth, or preemption. The
+    paged walk itself is validated against the dense oracle in
+    tests/test_kernels.py; dense ring-buffer decode stays covered by
+    tests/test_decode_equivalence.py.
+
+    Families the engine does not serve (ssm / hybrid / encdec) fall back to
+    the dense-cache ``decode_step`` path."""
     B, S = prompt_tokens.shape
     max_len = S + gen_len
+    decode, paged = _decode_fn(model, dot, kernel)
 
     logits, cache = model.prefill(params, {"tokens": prompt_tokens}, dot=dot,
                                   cache_layout="full")
-    cache = _grow_cache(model, cache, S, max_len)
+    if paged:
+        pool, pt = _identity_paged_pool(cache, B, max_len, page_size)
+    else:
+        cache = _grow_cache(model, cache, S, max_len)
 
-    decode = _decode_fn(model, dot)
     out = [prompt_tokens]
     tok = _sample(logits, temperature, key)
     for i in range(gen_len):
         out.append(tok)
         if i == gen_len - 1:
             break
-        logits, cache = decode(params, cache, tok,
-                               jnp.asarray(S + i, jnp.int32))
+        if paged:
+            positions = jnp.full((B,), S + i, jnp.int32)
+            with quiet_donation():
+                logits, pool = decode(params, pool, pt, tok, positions)
+        else:
+            logits, cache = decode(params, cache, tok,
+                                   jnp.asarray(S + i, jnp.int32))
         if key is not None:
             key = jax.random.fold_in(key, i)
         tok = _sample(logits, temperature, key)
     return jnp.concatenate(out, axis=1)
 
 
-def _sample(logits, temperature, key):
-    logits = logits[:, -1]
-    if temperature <= 0.0 or key is None:
-        return jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
-    return jax.random.categorical(key, logits / temperature)[:, None] \
-        .astype(jnp.int32)
-
-
 def _grow_cache(model, cache, cur: int, max_len: int):
-    """Pad full-attention KV caches from prefill length to max_len."""
+    """Pad dense KV caches from prefill length to max_len (the non-paged
+    family fallback)."""
     def grow(path, a):
         ks = jax.tree_util.keystr(path)
         if a.ndim == 5 and "mamba" not in ks and a.shape[2] == cur:
@@ -91,6 +125,14 @@ def _grow_cache(model, cache, cur: int, max_len: int):
             return jnp.pad(a, pad)
         return a
     return jax.tree_util.tree_map_with_path(grow, cache)
+
+
+def _sample(logits, temperature, key):
+    logits = logits[:, -1]
+    if temperature <= 0.0 or key is None:
+        return jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+    return jax.random.categorical(key, logits / temperature)[:, None] \
+        .astype(jnp.int32)
 
 
 def _make_requests(args, cfg):
@@ -118,6 +160,22 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="KV pool page size in tokens (both modes)")
+    ap.add_argument("--paged-kernel", default="auto",
+                    choices=("auto", "pallas", "ref"),
+                    help="paged-attention path: Pallas page-walk kernel, "
+                         "pure-JAX block walk, or auto (Pallas on TPU)")
+    ap.add_argument("--reserve-upfront", action="store_true",
+                    help="legacy admission: reserve every page of "
+                         "prompt+max_new at admission instead of growing "
+                         "lazily with preemption")
+    ap.add_argument("--expected-occupancy", type=float, default=None,
+                    help="fraction of max_model_len the admission policy "
+                         "assumes a typical sequence occupies (default "
+                         "0.5, or 1.0 with --reserve-upfront: worst-case "
+                         "reservation can never fill slots an expected-"
+                         "footprint batch was sized for)")
     ap.add_argument("--sequential", action="store_true",
                     help="legacy fixed-batch loop instead of the engine")
     ap.add_argument("--quant-policy", default="",
@@ -147,7 +205,8 @@ def main():
                 2, cfg.vocab_size, (args.batch, args.prompt_len)), jnp.int32)
         t0 = time.time()
         out = generate(model, params, prompt, args.gen,
-                       temperature=args.temperature,
+                       temperature=args.temperature, dot=dot,
+                       page_size=args.page_size, kernel=args.paged_kernel,
                        key=jax.random.PRNGKey(1)
                        if args.temperature > 0 else None)
         dt = time.time() - t0
@@ -160,7 +219,12 @@ def main():
 
     hw = HARDWARES[args.hw]
     max_len = args.prompt_len + args.gen
+    occupancy = args.expected_occupancy
+    if occupancy is None:
+        occupancy = 1.0 if args.reserve_upfront else 0.5
     policy = derive_policy(cfg, hw, max_model_len=max_len,
+                           page_size=args.page_size,
+                           expected_occupancy=occupancy,
                            param_bytes=model.param_bytes())
     if args.max_batch:
         import dataclasses
@@ -168,8 +232,11 @@ def main():
     print(f"admission[{hw.name}]: max_batch={policy.max_batch} "
           f"prefill_chunk={policy.prefill_chunk} "
           f"quant={policy.quant_bits}b pages={policy.num_pages} "
+          f"page_size={policy.page_size} "
           f"(est decode {policy.est_decode_s * 1e3:.2f}ms/step)")
-    engine = Engine(model, params, policy, temperature=args.temperature)
+    engine = Engine(model, params, policy, temperature=args.temperature,
+                    paged_kernel=args.paged_kernel,
+                    reserve_upfront=args.reserve_upfront)
     reqs = _make_requests(args, cfg)
     t0 = time.time()
     outs = engine.run(reqs)
@@ -177,7 +244,9 @@ def main():
     gen_total = engine.stats["decode_tokens"] + engine.stats["prefills"]
     print(f"{cfg.name}: served {len(reqs)} requests, {gen_total} tokens in "
           f"{dt:.2f}s ({gen_total / dt:.1f} tok/s, "
-          f"{engine.stats['decode_ticks']} decode ticks)")
+          f"{engine.stats['decode_ticks']} decode ticks, "
+          f"{engine.stats['preemptions']} preemptions, "
+          f"{engine.stats['grown_pages']} pages grown)")
     first = outs[0]
     print("sample:", first[len(reqs[0].prompt):len(reqs[0].prompt) + 16])
 

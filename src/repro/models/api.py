@@ -88,13 +88,15 @@ class Model:
         return transformer.unembed(params, hidden, self.cfg, dot=dot)
 
     def decode_step_paged(self, params, pool, page_table, token, positions,
-                          *, ac=None, dot=None):
-        """Continuous-batching decode: per-sequence positions, KV gathered
-        through the page table (see serving/engine)."""
+                          *, ac=None, dot=None, kernel="auto"):
+        """Continuous-batching decode: per-sequence positions, KV walked
+        page-by-page through the page table (see serving/engine). ``kernel``
+        picks the paged-attention path: "auto" (Pallas on TPU, pure-JAX
+        block walk elsewhere), "pallas", or "ref"."""
         ac = ac or transformer._identity_ac
         return transformer.decode_step_paged(params, pool, page_table, token,
                                              positions, self.cfg, ac=ac,
-                                             dot=dot)
+                                             dot=dot, kernel=kernel)
 
     # -- caches & inputs ----------------------------------------------------
     def cache_specs(self, batch: int, seq_len: int):

@@ -18,6 +18,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels import ops as kops
 from repro.models import flash as flash_lib
 from repro.models.layers import apply_rope, softcap
 from repro.models.params import PDef
@@ -182,7 +183,8 @@ def attention_decode(p, x, cache_k, cache_v, pos, kind: str, cfg, *,
 
 
 def attention_decode_paged(p, x, pool_k, pool_v, page_table, positions,
-                           kind: str, cfg, *, dot=None, ac=None):
+                           kind: str, cfg, *, dot=None, ac=None,
+                           kernel: str = "auto"):
     """Slot-indexed one-token decode against a paged KV pool.
 
     x           (B, 1, D)   one new token's activations per sequence
@@ -191,17 +193,26 @@ def attention_decode_paged(p, x, pool_k, pool_v, page_table, positions,
                 unused tail entries must point at the scratch page 0
     positions   (B,) int32  absolute position of the incoming token (== the
                 number of tokens already cached for that sequence)
+    kernel      "auto" | "pallas" | "ref" — kernels/ops.py::paged_attention
+                dispatch: the Pallas page-walk kernel on TPU, the pure-JAX
+                block walk elsewhere. Neither path materializes the dense
+                chronological (B, n_pages*page, K, hd) KV view, and local
+                layers walk only the window's pages instead of masking a
+                full-length gather.
 
     The new k/v are scattered into page ``page_table[b, pos // page]`` at
-    slot ``pos % page``; attention then gathers each sequence's pages back
-    into chronological order and masks columns beyond ``positions[b]`` (and
+    slot ``pos % page``; attention then walks the sequence's pages in
+    chronological order, masking columns beyond ``positions[b]`` (and
     outside the sliding window for local layers). Because RoPE is applied
-    at cache-write time with absolute positions, the gathered cache is
-    bit-identical to a dense chronological cache.
+    at cache-write time with absolute positions, the page walk matches a
+    dense chronological cache to fp32-accumulation precision.
+
+    ``ac`` (sequence-parallel decode hints) applies to the dense decode
+    path only; the paged walk is the single-host engine path and ignores it
+    (sharded paged decode is a ROADMAP item).
 
     Returns (out (B,1,D), pool_k, pool_v).
     """
-    B = x.shape[0]
     page = pool_k.shape[1]
     q, k_new, v_new = qkv(p, x, cfg.rope_theta, positions[:, None], dot=dot)
     pids = jnp.take_along_axis(page_table, (positions // page)[:, None],
@@ -211,15 +222,10 @@ def attention_decode_paged(p, x, pool_k, pool_v, page_table, positions,
                                         mode="promise_in_bounds")
     pool_v = pool_v.at[pids, slots].set(v_new[:, 0],
                                         mode="promise_in_bounds")
-    k = pool_k[page_table].reshape((B, -1) + pool_k.shape[2:])
-    v = pool_v[page_table].reshape((B, -1) + pool_v.shape[2:])
-    T = k.shape[1]
-    j = jnp.arange(T)[None, :]
-    valid = j <= positions[:, None]
-    if kind == "local":
-        valid &= j > positions[:, None] - cfg.window_size
-    mask = valid[:, None, None, :]
-    o = _attend(q, k, v, mask, cfg.attn_softcap, ac=ac)
+    window = cfg.window_size if kind == "local" else 0
+    o = kops.paged_attention(q[:, 0], pool_k, pool_v, page_table, positions,
+                             window=window, cap=cfg.attn_softcap,
+                             mode=kernel)[:, None]
     dot_o = dot or (lambda a, w, name: jnp.einsum(
         "bsnh,nhd->bsd", a, w))
     return dot_o(o, p["wo"], "attn_o"), pool_k, pool_v

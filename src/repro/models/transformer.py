@@ -414,11 +414,11 @@ def decode_step(params, cache, token, pos, cfg, *, ac: Ac = _identity_ac,
 
 # ----------------------------------------------------------- paged decode ----
 def _dense_block_decode_paged(p, x, pool_kv, page_table, positions, kind, cfg,
-                              dot=None, ac=None):
+                              dot=None, ac=None, kernel="auto"):
     h = rms_norm(x, p["ln1"], cfg.norm_eps)
     a, ck, cv = attn.attention_decode_paged(
         p["attn"], h, pool_kv["k"], pool_kv["v"], page_table, positions,
-        kind["attn"], cfg, dot=dot, ac=ac)
+        kind["attn"], cfg, dot=dot, ac=ac, kernel=kernel)
     if cfg.sandwich_norm:
         a = rms_norm(a, p["ln1_post"], cfg.norm_eps)
     x = x + a
@@ -434,14 +434,17 @@ def _dense_block_decode_paged(p, x, pool_kv, page_table, positions, kind, cfg,
 
 
 def decode_step_paged(params, pool, page_table, token, positions, cfg, *,
-                      ac: Ac = _identity_ac, dot=None):
+                      ac: Ac = _identity_ac, dot=None, kernel="auto"):
     """Batched slot-indexed decode against a paged KV pool.
 
     token (B,1) int32; positions (B,) int32 per-sequence absolute positions
     (continuous batching: every batch slot may be at a different depth);
     pool is the pytree from ``pool_specs`` and page_table (B, n_pages) maps
     each sequence's logical blocks to physical pages (shared across layers).
-    Returns (logits (B,1,V), new_pool).
+    ``kernel`` selects the paged-attention path (see attention_decode_paged)
+    — every choice walks pages block-by-block; no layer materializes the
+    dense chronological KV view, and local layers trim the walk to their
+    window. Returns (logits (B,1,V), new_pool).
     """
     if cfg.family not in ("dense", "moe", "vlm"):
         raise NotImplementedError(
@@ -457,7 +460,7 @@ def decode_step_paged(params, pool, page_table, token, positions, cfg, *,
         for j in range(P):
             h, new_g[f"sub{j}"] = _dense_block_decode_paged(
                 blocks[f"sub{j}"], h, pool_g[f"sub{j}"], page_table,
-                positions, kinds[j], cfg, dot=dot, ac=ac)
+                positions, kinds[j], cfg, dot=dot, ac=ac, kernel=kernel)
         return h, new_g
 
     x, new_pool = jax.lax.scan(group_body, x, (params["blocks"], pool))

@@ -18,10 +18,21 @@ page allocation covers all layers, so the allocator hands out one list of
 physical page ids per request and the per-layer pools index it identically
 (vLLM's layout, transposed into the repo's scan-stacked group convention).
 
-Each in-flight sequence owns ``ceil((prompt + max_new) / page_size)`` pages,
-reserved at admission so decode can never OOM mid-flight. The scheduler
-packs active sequences into a fixed-width batch; a decode tick calls
-``Model.decode_step_paged`` with:
+Pages are the unit of **memory and compute**. Allocation is dynamic: a
+request is admitted with only the pages its prompt (plus the first decode
+slot) needs, then grows page-by-page as decode crosses block boundaries.
+On pool exhaustion the youngest active sequence is preempted — its pages
+are freed and it is requeued at the FIFO front with its generated tokens
+folded into the prompt, so its next admission re-prefills the extension
+(recompute) and greedy outputs are unchanged. Freed pages are recycled
+without clearing: a new owner only ever reads slots at ``j <= pos`` that it
+has itself written (prefill spans, then decode writes in position order),
+so stale KV from a previous owner stays behind the mask. The legacy
+worst-case policy — ``ceil((prompt + max_new) / page_size)`` pages reserved
+at admission, no preemption — remains available as ``reserve_upfront``.
+
+The scheduler packs active sequences into a fixed-width batch; a decode
+tick calls ``Model.decode_step_paged`` with:
 
     page_table : (B, max_pages) int32 — physical page of logical block i;
                  unused tails (and idle batch slots) point at the scratch
@@ -30,14 +41,21 @@ packs active sequences into a fixed-width batch; a decode tick calls
                  can be at a different decode depth (continuous batching)
 
 Token ``pos`` of sequence ``b`` lives at page ``page_table[b, pos // page]``
-slot ``pos % page``. RoPE is applied at cache-write time with absolute
-positions, so gathering pages back into chronological order is bit-exact
-with the dense cache — the engine's greedy outputs are token-identical to
-the sequential `launch.serve.generate` baseline (asserted in
-tests/test_engine.py).
+slot ``pos % page``. Attention walks the page table block-by-block — the
+Pallas paged-attention kernel (kernels/paged_attention.py) on TPU, its
+pure-JAX block-walk twin (kernels/ref.py) elsewhere — with local-window
+layers trimming the walk to their window; the dense chronological
+(B, max_pages*page_size, K, hd) KV view is never materialized. RoPE is
+applied at cache-write time with absolute positions, and the sequential
+`launch.serve.generate` baseline decodes through the same walk over an
+identity page table, so the engine's greedy outputs — across batching,
+growth, and preemption — are token-identical to it (asserted in
+tests/test_engine.py; the walk itself is validated against the dense
+oracle in tests/test_kernels.py).
 
-Modules: `pool` (page allocator + device pool), `scheduler` (FIFO admission
-/ eviction / backfill bookkeeping), `admission` (roofline-derived policy),
+Modules: `pool` (page allocator + device pool + bounded jit caches),
+`scheduler` (FIFO admission / growth / preemption / eviction bookkeeping),
+`admission` (roofline-derived policy, expected-footprint batch sizing),
 `engine` (the host loop tying them to the model).
 """
 from repro.serving.engine.admission import AdmissionPolicy, derive_policy

@@ -89,13 +89,24 @@ def derive_policy(cfg, hw: hwm.Hardware, *, max_model_len: int,
                   prefill_stall_factor: float = 4.0,
                   hbm_util: float = 0.9,
                   max_batch_cap: int = 1024,
+                  expected_occupancy: float = 0.5,
                   param_bytes: Optional[int] = None) -> AdmissionPolicy:
     """Pick (num_pages, max_batch, prefill_chunk, quant_bits) for a target.
 
     ``param_bytes`` defaults to the analytic bf16 weight footprint
     (``cfg.param_count() * 2``); pass the exact value from
     ``Model.param_bytes()`` when available.
+
+    ``expected_occupancy`` sizes the memory-bound batch from the *expected*
+    per-sequence KV footprint (that fraction of ``max_model_len``) rather
+    than the worst case: pages are allocated lazily and the engine preempts
+    on exhaustion, so admission no longer has to reserve for every
+    sequence simultaneously hitting max length. 1.0 restores the
+    worst-case sizing that matches ``reserve_upfront`` scheduling.
     """
+    if not 0.0 < expected_occupancy <= 1.0:
+        raise ValueError(f"expected_occupancy must be in (0, 1], "
+                         f"got {expected_occupancy}")
     if cfg.is_encdec or cfg.family not in ("dense", "moe", "vlm"):
         raise NotImplementedError(
             f"admission policy sizes attention KV pools; {cfg.name} "
@@ -126,7 +137,11 @@ def derive_policy(cfg, hw: hwm.Hardware, *, max_model_len: int,
     # pool a partial page short of a max-length request, which the scheduler
     # would wait on forever. Overshoot is < 2 pages (incl. scratch page 0).
     num_pages = max(int(kv_budget // page_bytes), pages_per_seq) + 1
-    mem_batch = max((num_pages - 1) // pages_per_seq, 1)
+    # expected (not worst-case) footprint: lazy page growth + preemption
+    # absorb the tail where every sequence runs to max_model_len at once.
+    pages_expected = max(
+        -(-int(expected_occupancy * max_model_len) // page_size), 1)
+    mem_batch = max((num_pages - 1) // pages_expected, 1)
 
     # Decode-latency roofline: largest batch meeting the SLO (monotonic).
     lo, hi = 1, max(min(mem_batch, max_batch_cap), 1)

@@ -6,16 +6,25 @@ One ``step()``:
      and slot-gated, see scheduler.py), running each admitted request's
      prefill (prompt padded to the policy's roofline-derived bucket) and
      scattering its KV into the request's pages;
-  2. decode tick — one batched ``decode_step_paged`` over all active slots
-     (idle slots ride along against the scratch page and are ignored);
-  3. eviction — finished sequences free their pages/slot immediately, so
+  2. growth — every live sequence whose decode position crosses a page
+     boundary grows by one page; on pool exhaustion the youngest sequence
+     is preempted (freed + requeued as a prompt-extension) to make room,
+     oldest-first so the head of the line always drains;
+  3. decode tick — one batched ``decode_step_paged`` over the surviving
+     slots (idle slots ride along against the scratch page and are
+     ignored). The decode path walks pages with the Pallas paged-attention
+     kernel (pure-JAX block walk off-TPU) — no dense chronological KV view
+     is ever materialized;
+  4. eviction — finished sequences free their pages/slot immediately, so
      the next step's admission backfills mid-flight.
 
 The decode closure is jitted ONCE per engine (fixed shapes: the policy's
-max_batch and page-table width), and prefill is jitted per padding bucket —
-no per-request retracing. When the policy's memory roofline demanded it,
-weights are HAQ-quantized (serving/quant.py) and the dequantizing ``dot``
-is threaded through both paths.
+max_batch and page-table width); prefill and pool-writer jits are compiled
+per padding bucket and held in small LRU caches so long-running engines
+with many bucket shapes don't grow retrace caches without limit. When the
+policy's memory roofline demanded it, weights are HAQ-quantized
+(serving/quant.py) and the dequantizing ``dot`` is threaded through both
+paths.
 """
 from __future__ import annotations
 
@@ -27,7 +36,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.serving.engine.admission import AdmissionPolicy
-from repro.serving.engine.pool import PagedKVPool, quiet_donation
+from repro.serving.engine.pool import JitLRU, PagedKVPool, quiet_donation
 from repro.serving.engine.scheduler import ActiveSeq, Request, Scheduler
 from repro.serving import quant as squant
 
@@ -42,8 +51,11 @@ def sample_token(logits_row, temperature: float, key) -> int:
 
 
 class Engine:
+    PREFILL_JIT_CAP = 8   # LRU cap on per-bucket prefill jits
+
     def __init__(self, model, params, policy: AdmissionPolicy, *,
-                 temperature: float = 0.0, seed: int = 0, dot=None):
+                 temperature: float = 0.0, seed: int = 0, dot=None,
+                 paged_kernel: str = "auto", reserve_upfront: bool = False):
         cfg = model.cfg
         if cfg.is_encdec or cfg.family not in ("dense", "moe") \
                 or cfg.frontend != "none":
@@ -64,19 +76,25 @@ class Engine:
         self.params = params
 
         # Allocate only the pages max_batch concurrent sequences can use,
-        # capped by what the target's HBM holds (policy.num_pages).
+        # capped by what the target's HBM holds (policy.num_pages) and
+        # floored at one full-length sequence plus scratch — the growth
+        # loop's guarantee that a lone sequence can always reach
+        # max_model_len without preempting itself.
         needed = policy.max_batch * policy.pages_per_seq + 1
-        num_pages = min(policy.num_pages, needed)
+        num_pages = max(min(policy.num_pages, needed),
+                        policy.pages_per_seq + 1)
         self.kv = PagedKVPool(model, num_pages, policy.page_size)
         self.scheduler = Scheduler(self.kv.allocator, policy.max_batch,
-                                   policy.max_model_len)
+                                   policy.max_model_len,
+                                   reserve_upfront=reserve_upfront)
 
         # jit once: fixed (max_batch, pages_per_seq) shapes for decode;
-        # prefill compiles per padding bucket. The pool is donated so decode
-        # ticks update it in place instead of double-buffering it.
+        # prefill compiles per padding bucket (LRU below). The pool is
+        # donated so decode ticks update it in place instead of double-
+        # buffering it.
         self._decode = jax.jit(
             lambda p, pool, pt, tok, pos: model.decode_step_paged(
-                p, pool, pt, tok, pos, dot=dot),
+                p, pool, pt, tok, pos, dot=dot, kernel=paged_kernel),
             donate_argnums=(1,))
 
         def prefill_fn(p, toks, last_idx):
@@ -90,37 +108,55 @@ class Engine:
                                     axis=1)
             return model.unembed(p, h, dot=dot), cache
 
-        self._prefill = jax.jit(prefill_fn)
+        # one jit instance per padding bucket, bounded: evicting an entry
+        # drops its compiled executable (a single shared jax.jit would keep
+        # every bucket's trace alive for the engine's lifetime).
+        self._prefill_jits = JitLRU(self.PREFILL_JIT_CAP)
+        self._make_prefill = lambda: jax.jit(prefill_fn)
         self.stats = {"decode_ticks": 0, "decode_tokens": 0,
-                      "prefills": 0, "admitted": 0}
+                      "prefills": 0, "admitted": 0, "preemptions": 0,
+                      "grown_pages": 0}
         self._outputs: Dict[int, np.ndarray] = {}
 
     # ------------------------------------------------------------- intake --
     def submit(self, req: Request) -> None:
         self.scheduler.submit(req)
 
+    def reset_stats(self) -> None:
+        """Zero the counters and drop held outputs (benchmarks re-time a
+        warmed engine instance so jit compiles stay out of the clock)."""
+        for k in self.stats:
+            self.stats[k] = 0
+        self.scheduler.num_preempted = 0
+        self._outputs.clear()
+
     # --------------------------------------------------------------- step --
     def step(self, now: float = float("inf")) -> List[int]:
         """One scheduler tick: admit + prefill, then one batched decode.
-        Returns the rids that finished during this step."""
-        finished: List[ActiveSeq] = []
+        Returns the rids that finished during this step. Finished sequences
+        are released the moment they finish — before the decode tick's
+        growth phase — so their pages backfill growth instead of tempting
+        the preemption picker."""
+        out: List[int] = []
         for seq in self.scheduler.admit(now):
             self.stats["admitted"] += 1
             self._run_prefill(seq)
             if seq.is_done():
-                finished.append(seq)
-        live = [s for s in self.scheduler.active.values()
-                if s not in finished]
+                out.append(self._finish(seq))
+        live = list(self.scheduler.active.values())
         if live:
+            finished: List[ActiveSeq] = []
             self._decode_tick(live, finished)
-        out = []
-        for seq in finished:
-            self.scheduler.release(seq)
-            self._outputs[seq.req.rid] = np.concatenate(
-                [np.asarray(seq.req.prompt, np.int32),
-                 np.asarray(seq.generated, np.int32)])
-            out.append(seq.req.rid)
+            for seq in finished:
+                out.append(self._finish(seq))
         return out
+
+    def _finish(self, seq: ActiveSeq) -> int:
+        self.scheduler.release(seq)
+        self._outputs[seq.req.rid] = np.concatenate(
+            [np.asarray(seq.req.prompt, np.int32),
+             np.asarray(seq.generated, np.int32)])
+        return seq.req.rid
 
     def _run_prefill(self, seq: ActiveSeq) -> None:
         prompt = np.asarray(seq.req.prompt, np.int32)
@@ -129,8 +165,9 @@ class Engine:
         Sp = -(-S // chunk) * chunk
         toks = np.zeros((1, Sp), np.int32)
         toks[0, :S] = prompt
-        logits, cache = self._prefill(self.params, jnp.asarray(toks),
-                                      jnp.asarray(S - 1, jnp.int32))
+        prefill = self._prefill_jits.get(Sp, self._make_prefill)
+        logits, cache = prefill(self.params, jnp.asarray(toks),
+                                jnp.asarray(S - 1, jnp.int32))
         self.kv.write_prefill(cache, seq.pages)
         self.stats["prefills"] += 1
         tok = sample_token(np.asarray(logits[0, 0]), self.temperature,
@@ -138,14 +175,46 @@ class Engine:
         seq.generated.append(tok)
         seq.pos = S
 
+    def _is_live(self, seq: ActiveSeq) -> bool:
+        return self.scheduler.active.get(seq.slot) is seq
+
     def _decode_tick(self, live: List[ActiveSeq],
                      finished: List[ActiveSeq]) -> None:
+        # Growth phase, oldest first: crossing a page boundary claims a new
+        # page; exhaustion preempts the youngest active sequence — the
+        # grower itself, if it is the youngest, so pages only ever flow
+        # from younger to older and the FIFO head keeps draining. Victims
+        # already in `live` are filtered out below; their requests ride the
+        # queue back in on a later step.
+        live = sorted(live, key=lambda s: s.birth)
+        for seq in live:
+            if not self._is_live(seq):
+                continue                    # preempted earlier this tick
+            before = len(seq.pages)
+            while not self.scheduler.ensure_capacity(seq):
+                victim = self.scheduler.youngest_active()
+                if victim is seq and self.scheduler.num_active == 1:
+                    raise RuntimeError(
+                        "page pool smaller than one max-length sequence")
+                self.scheduler.preempt(victim)
+                if victim is seq:
+                    break                   # yielded to older sequences
+            if self._is_live(seq):
+                self.stats["grown_pages"] += len(seq.pages) - before
+        self.stats["preemptions"] = self.scheduler.num_preempted
+        ready = [s for s in live if self._is_live(s)]
+        if not ready:
+            return
+
         B = self.policy.max_batch
         maxp = self.policy.pages_per_seq
         tokens = np.zeros((B, 1), np.int32)
-        positions = np.zeros((B,), np.int32)
+        # idle slots ride along against the scratch page; they carry the
+        # minimum live position (not 0) so the block walk's batch-wide
+        # window-trim bound stays tight for local-attention layers.
+        positions = np.full((B,), min(s.pos for s in ready), np.int32)
         pt = np.zeros((B, maxp), np.int32)       # 0 -> scratch page
-        for seq in live:
+        for seq in ready:
             tokens[seq.slot, 0] = seq.last_token
             positions[seq.slot] = seq.pos
             pt[seq.slot, :len(seq.pages)] = seq.pages
@@ -155,7 +224,7 @@ class Engine:
                 jnp.asarray(tokens), jnp.asarray(positions))
         self.stats["decode_ticks"] += 1
         rows = np.asarray(logits[:, 0])      # one host transfer per tick
-        for seq in live:
+        for seq in ready:
             tok = sample_token(rows[seq.slot], self.temperature,
                                self._step_key(seq))
             seq.generated.append(tok)

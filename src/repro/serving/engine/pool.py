@@ -10,8 +10,8 @@ from __future__ import annotations
 
 import contextlib
 import warnings
-from collections import deque
-from typing import List, Optional, Sequence
+from collections import OrderedDict, deque
+from typing import Callable, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -31,7 +31,11 @@ def quiet_donation():
 
 class PageAllocator:
     """Free-list allocator over ``num_pages`` physical pages (page 0 is the
-    scratch page and is never handed out)."""
+    scratch page and is never handed out).
+
+    Tracks the allocated set so a double-free is rejected instead of
+    silently entering the free list twice — a page freed twice would be
+    handed to two sequences, which corrupts both KV streams."""
 
     def __init__(self, num_pages: int, page_size: int):
         if num_pages < 2:
@@ -39,10 +43,15 @@ class PageAllocator:
         self.num_pages = num_pages
         self.page_size = page_size
         self._free: deque = deque(range(1, num_pages))
+        self._allocated: set = set()
 
     @property
     def num_free(self) -> int:
         return len(self._free)
+
+    @property
+    def num_allocated(self) -> int:
+        return len(self._allocated)
 
     def pages_for(self, n_tokens: int) -> int:
         return -(-n_tokens // self.page_size)
@@ -51,23 +60,62 @@ class PageAllocator:
         """Reserve n pages, or None if the pool can't satisfy the request."""
         if n > len(self._free):
             return None
-        return [self._free.popleft() for _ in range(n)]
+        pages = [self._free.popleft() for _ in range(n)]
+        self._allocated.update(pages)
+        return pages
 
     def free(self, pages: Sequence[int]) -> None:
+        seen = set()
         for p in pages:
             if not 1 <= p < self.num_pages:
                 raise ValueError(f"freeing invalid page {p}")
+            if p not in self._allocated or p in seen:
+                raise ValueError(f"double free of page {p}")
+            seen.add(p)
+        self._allocated.difference_update(seen)
         self._free.extend(pages)
+
+
+class JitLRU:
+    """Bounded per-shape jit cache: each entry is its own ``jax.jit``
+    instance keyed by a shape tuple, so evicting the entry really drops the
+    compiled executable. Long-running engines see an open-ended set of
+    bucket shapes (prefill buckets, prefill-span writers); without a cap the
+    retrace caches grow without limit."""
+
+    def __init__(self, cap: int = 8):
+        self.cap = cap
+        self._d: OrderedDict = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+
+    def __len__(self) -> int:
+        return len(self._d)
+
+    def get(self, key, make: Callable):
+        fn = self._d.get(key)
+        if fn is None:
+            self.misses += 1
+            fn = make()
+            self._d[key] = fn
+            while len(self._d) > self.cap:
+                self._d.popitem(last=False)
+        else:
+            self.hits += 1
+            self._d.move_to_end(key)
+        return fn
 
 
 class PagedKVPool:
     """Device pool arrays + the allocator that tracks their occupancy."""
 
+    WRITE_JIT_CAP = 8   # LRU cap on per-(n_pages, cache_len) writer jits
+
     def __init__(self, model, num_pages: int, page_size: int):
         self.allocator = PageAllocator(num_pages, page_size)
         self.page_size = page_size
         self.pool = model.init_pool(num_pages, page_size)
-        self._write_jit = {}        # (n_pages, cache_len) -> jitted writer
+        self._write_jit = JitLRU(self.WRITE_JIT_CAP)
 
     @property
     def num_free(self) -> int:
@@ -77,17 +125,17 @@ class PagedKVPool:
         """Scatter one request's prefill cache (full layout, B=1, bucket-
         padded length) into its pages. Jitted per (n_pages, cache_len) shape
         with the pool donated, so the write is an in-place scatter rather
-        than a full-pool copy per admission. Bucket-padding garbage beyond
-        the true prompt lands only inside the request's own pages and is
-        masked (j <= pos) or overwritten by decode."""
+        than a full-pool copy per admission; the jits live in a small LRU so
+        an open-ended mix of bucket/page-count shapes can't grow the retrace
+        cache without bound. Bucket-padding garbage beyond the true prompt
+        lands only inside the request's own pages and is masked (j <= pos)
+        or overwritten by decode."""
         n = len(pages)
         page = self.page_size
         Sp = jax.tree.leaves(cache)[0].shape[2]
         span = n * page
 
-        key = (n, Sp)
-        fn = self._write_jit.get(key)
-        if fn is None:
+        def make():
             def write(pool, cache, idx):
                 def wr(pool_leaf, cache_leaf):
                     c = cache_leaf[:, 0]                # (G, Sp, K, hd)
@@ -99,9 +147,9 @@ class PagedKVPool:
                     c = c.reshape(c.shape[0], n, page, *c.shape[2:])
                     return pool_leaf.at[:, idx].set(c)
                 return jax.tree.map(wr, pool, cache)
-            fn = jax.jit(write, donate_argnums=(0,))
-            self._write_jit[key] = fn
+            return jax.jit(write, donate_argnums=(0,))
 
+        fn = self._write_jit.get((n, Sp), make)
         with quiet_donation():
             self.pool = fn(self.pool, cache,
                            jnp.asarray(np.asarray(pages, np.int32)))

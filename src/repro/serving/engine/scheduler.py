@@ -1,15 +1,26 @@
-"""Continuous-batching scheduler: FIFO admission, eviction, backfill.
+"""Continuous-batching scheduler: FIFO admission, dynamic page growth,
+preemption, eviction, backfill.
 
 Pure host-side bookkeeping (no jax) so the policy is unit-testable without
 a model. The scheduler owns batch slots and, via the page allocator, KV
 pages; the engine owns the device arrays.
 
-Admission reserves every page a request can ever need
-(``ceil((prompt + max_new) / page_size)``) up front, so an admitted
-sequence can never OOM mid-flight and eviction is only ever voluntary
-(finished / EOS). Head-of-line FIFO: if the front request doesn't fit, we
-wait for an eviction rather than skip it (starvation-free). Dynamic page
-allocation with preemption is an open item (ROADMAP).
+Pages are allocated **lazily**: admission reserves only the pages the
+prompt (plus the first generated token) needs, and a sequence grows
+page-by-page as decode crosses block boundaries (``ensure_capacity``).
+When the pool is exhausted mid-growth, the **youngest** active sequence is
+preempted — its pages are freed and it is requeued at the FIFO front with
+its generated tokens folded into the prompt (recompute-style preemption, so
+its next admission re-prefills the extended prompt and resumes exactly
+where it stopped). Preempting youngest-first keeps the oldest sequences
+draining, so the loop makes progress and admission stays starvation-free.
+``reserve_upfront=True`` restores the legacy worst-case policy — every page
+a request could ever need (``ceil((prompt + max_new) / page_size)``)
+reserved at admission — kept as the conservative mode and the benchmark
+baseline.
+
+Head-of-line FIFO: if the front request doesn't fit, we wait for an
+eviction rather than skip it (starvation-free).
 """
 from __future__ import annotations
 
@@ -36,6 +47,7 @@ class ActiveSeq:
     req: Request
     slot: int
     pages: List[int]
+    birth: int = 0               # admission order (preemption picks max)
     pos: int = 0                 # tokens currently cached
     generated: List[int] = dataclasses.field(default_factory=list)
 
@@ -53,13 +65,16 @@ class ActiveSeq:
 
 class Scheduler:
     def __init__(self, allocator: PageAllocator, max_batch: int,
-                 max_model_len: int):
+                 max_model_len: int, *, reserve_upfront: bool = False):
         self.allocator = allocator
         self.max_batch = max_batch
         self.max_model_len = max_model_len
+        self.reserve_upfront = reserve_upfront
         self.queue: deque = deque()
         self.active: Dict[int, ActiveSeq] = {}     # slot -> seq
         self._free_slots = list(reversed(range(max_batch)))
+        self._births = 0
+        self.num_preempted = 0
 
     # ---------------------------------------------------------- lifecycle --
     def submit(self, req: Request) -> None:
@@ -71,24 +86,80 @@ class Scheduler:
         self.queue.append(req)
 
     def admit(self, now: float = float("inf")) -> List[ActiveSeq]:
-        """Admit FIFO-front requests while a batch slot and enough pages for
-        the request's full lifetime are available. Returns newly admitted
-        sequences (prefill still pending — the engine runs it)."""
+        """Admit FIFO-front requests while a batch slot and enough pages are
+        available — the prompt's pages plus one decode slot (and, while
+        other sequences are in flight, one free page of growth headroom) by
+        default; the full worst-case lifetime with ``reserve_upfront``.
+        Returns newly admitted sequences (prefill still pending — the
+        engine runs it)."""
         admitted = []
         while self.queue and self._free_slots:
             req = self.queue[0]
             if req.arrival > now:
                 break
-            n = self.allocator.pages_for(len(req.prompt) + req.max_new)
+            tokens = len(req.prompt) + (req.max_new if self.reserve_upfront
+                                        else 1)
+            n = self.allocator.pages_for(tokens)
+            if not self.reserve_upfront and self.active \
+                    and self.allocator.num_free < n + 1:
+                # growth watermark: admitting into the pool's last pages
+                # invites paying a full prefill only to be preempted by an
+                # older sequence's very next page boundary — leave one page
+                # of headroom while anything else is in flight.
+                break
             pages = self.allocator.alloc(n)
             if pages is None:
                 break                       # wait for an eviction (FIFO)
             self.queue.popleft()
             slot = self._free_slots.pop()
-            seq = ActiveSeq(req=req, slot=slot, pages=pages)
+            seq = ActiveSeq(req=req, slot=slot, pages=pages,
+                            birth=self._births)
+            self._births += 1
             self.active[slot] = seq
             admitted.append(seq)
         return admitted
+
+    def ensure_capacity(self, seq: ActiveSeq) -> bool:
+        """Grow ``seq`` page-by-page until it can cache the token at
+        ``seq.pos``. False if the pool is exhausted (caller preempts)."""
+        needed = self.allocator.pages_for(seq.pos + 1)
+        while len(seq.pages) < needed:
+            got = self.allocator.alloc(1)
+            if got is None:
+                return False
+            seq.pages.extend(got)
+        return True
+
+    def youngest_active(self) -> Optional[ActiveSeq]:
+        """The preemption victim candidate: the most recently admitted
+        active sequence. Pages always flow from younger to older — a
+        growing sequence may preempt the youngest, and if it *is* the
+        youngest it yields (self-preempts) rather than stalling an older
+        sequence — so the FIFO head keeps draining."""
+        if not self.active:
+            return None
+        return max(self.active.values(), key=lambda s: s.birth)
+
+    def preempt(self, seq: ActiveSeq) -> None:
+        """Free ``seq``'s slot and pages and requeue it at the FIFO front as
+        a prompt-extension: the tokens it already generated become part of
+        the prompt, so re-admission re-prefills them (recompute) and greedy
+        outputs are unchanged. The caller's Request object is left intact —
+        the extension rides a fresh Request with the same rid. (Sampled
+        decode re-draws its RNG keys from the new generation offsets after
+        a preemption.)"""
+        del self.active[seq.slot]
+        self.allocator.free(seq.pages)
+        self._free_slots.append(seq.slot)
+        assert seq.req.max_new > len(seq.generated), \
+            "done sequences are evicted, not preempted"
+        resumed = dataclasses.replace(
+            seq.req,
+            prompt=np.concatenate([np.asarray(seq.req.prompt, np.int32),
+                                   np.asarray(seq.generated, np.int32)]),
+            max_new=seq.req.max_new - len(seq.generated))
+        self.queue.appendleft(resumed)
+        self.num_preempted += 1
 
     def release(self, seq: ActiveSeq) -> None:
         """Evict a finished sequence: free its pages and batch slot so the
