@@ -1,7 +1,12 @@
-"""Engine throughput — continuous batching vs the sequential baseline, and
-lazy page allocation + preemption vs upfront reservation.
+"""Engine throughput — continuous batching vs the sequential baseline,
+lazy page allocation + preemption vs upfront reservation, and fp vs
+quantized KV-cache pools at equal HBM budget.
 
-Two traces on the tiny CPU config:
+Results are also written to ``BENCH_engine.json`` (see ``--out``) so the
+perf trajectory stays machine-readable across PRs; every trace RNG is
+seeded explicitly (TRACE_SEEDS).
+
+Three traces on the tiny CPU config:
 
   * **mixed** (16 requests, Poisson arrivals, Poisson-ish length mix):
     served sequentially through `launch.serve.generate` (B=1, one request
@@ -21,18 +26,29 @@ Two traces on the tiny CPU config:
     each mode's aggregate decode tokens/s; lazy wins because short
     requests slot into pages the long tail had only *nominally* reserved.
 
+  * **kv-quant** (the skewed shape on a page pool capped by a fixed HBM
+    *byte* budget): served through the engine with the fp pool, the int8
+    pool, and the HAQ-searched mixed policy (serving/kvquant; local-window
+    slots int4, global slots int8). All three pools get the same KV byte
+    budget, so the quantized pools hold ~2x / ~2.3x the pages — fewer
+    preemptions, more resident sequences, higher aggregate decode tok/s.
+    The fp pool is the exactness baseline; quantized modes additionally
+    report teacher-forced max-abs logit drift (kvquant.greedy_drift) and
+    the greedy token-match fraction against fp.
+
 Engines are warmed on the exact trace shapes and re-timed on the same
 instance, so jit compiles are excluded. Outputs are asserted identical
 between the two admission modes (and to the sequential baseline on the
 mixed trace).
 
 Run: ``PYTHONPATH=src python -m benchmarks.bench_engine_throughput``
-(CI smoke: ``--requests 4 --skewed-requests 4``).
+(CI smoke: ``--requests 4 --skewed-requests 4 --kv-requests 4``).
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
+import json
 import time
 
 import jax
@@ -45,6 +61,8 @@ from repro.core.hardware_model import V5E_EDGE
 from repro.launch.serve import generate
 from repro.models.api import build_model
 from repro.serving.engine import Engine, Request, derive_policy
+from repro.serving.engine.admission import kv_bytes_per_token
+from repro.serving.kvquant import greedy_drift, search_kv_policy
 
 ARCH = "gemma2-2b"
 MAX_BATCH = 8          # CPU-host cap on the policy's in-flight batch
@@ -54,6 +72,10 @@ ARRIVAL_RATE = 200.0   # req/s — a heavy-traffic burst
 
 SKEW_MAX_LEN = 128     # skewed trace: model len, 8 pages of 16 per seq
 SKEW_NUM_PAGES = 17    # 16 usable — two worst-case sequences' worth
+
+# explicit trace seeds: the JSON trajectory is only comparable across PRs
+# if every trace is reproducible
+TRACE_SEEDS = {"mixed": 0, "skewed": 1, "kv": 2}
 
 
 def make_trace(cfg, n, seed=0):
@@ -120,7 +142,7 @@ def timed_run(engine, reqs, *, realtime):
 
 
 def bench_mixed(model, params, cfg, n):
-    reqs = make_trace(cfg, n)
+    reqs = make_trace(cfg, n, seed=TRACE_SEEDS["mixed"])
     total_gen = sum(r.max_new for r in reqs)
     run_sequential(model, params, reqs)          # warm the baseline
     base_outs, base_dt = run_sequential(model, params, reqs)
@@ -144,10 +166,12 @@ def bench_mixed(model, params, cfg, n):
     print(f"# continuous batching: {eng_tps:.1f} tok/s vs sequential "
           f"{base_tps:.1f} tok/s -> {speedup:.2f}x (outputs identical)",
           flush=True)
+    return {"n": n, "sequential_tok_s": base_tps, "engine_tok_s": eng_tps,
+            "speedup": speedup}
 
 
 def bench_skewed(model, params, cfg, n):
-    reqs = make_skewed_trace(cfg, n)
+    reqs = make_skewed_trace(cfg, n, seed=TRACE_SEEDS["skewed"])
     results = {}
     for mode, upfront in (("upfront", True), ("lazy", False)):
         engine = build_engine(model, params, max_model_len=SKEW_MAX_LEN,
@@ -174,6 +198,73 @@ def bench_skewed(model, params, cfg, n):
     print(f"# lazy paging: {results['lazy'][1]:.1f} decode tok/s vs "
           f"upfront {results['upfront'][1]:.1f} -> {gain:.2f}x "
           f"(outputs identical)", flush=True)
+    return {"n": n, "upfront_decode_tok_s": results["upfront"][1],
+            "lazy_decode_tok_s": results["lazy"][1], "gain": gain}
+
+
+def _equal_budget_pages(cfg, kv_bits, page_size=16):
+    """Pages a fixed KV byte budget holds at a given bit policy — the fp
+    pool's SKEW_NUM_PAGES worth of bytes, re-sliced at quantized width."""
+    budget = (SKEW_NUM_PAGES - 1) * page_size * kv_bytes_per_token(cfg)
+    return int(budget // (page_size * kv_bytes_per_token(cfg, kv_bits))) + 1
+
+
+def bench_kv(model, params, cfg, n):
+    """fp vs int8 vs HAQ-mixed KV pools at equal HBM byte budget."""
+    reqs = make_skewed_trace(cfg, n, seed=TRACE_SEEDS["kv"])
+    haq = search_kv_policy(cfg, V5E_EDGE, max_model_len=SKEW_MAX_LEN,
+                           episodes=0, budget_frac=0.4)
+    modes = {"fp16": None, "int8": 8, "haq": haq["bits"]}
+    out = {"haq_policy": haq["policy"]}
+    fp_outs = None
+    fp_replay = None     # one fp teacher-forced replay shared by all modes
+    for name, bits in modes.items():
+        pages = _equal_budget_pages(cfg, bits)
+        policy = derive_policy(cfg, V5E_EDGE, max_model_len=SKEW_MAX_LEN,
+                               param_bytes=model.param_bytes(),
+                               kv_bits=bits)
+        policy = dataclasses.replace(policy, max_batch=MAX_BATCH,
+                                     num_pages=pages)
+        engine = Engine(model, params, policy)
+        outs, dt, stats = timed_run(engine, reqs, realtime=False)
+        tps = stats["decode_tokens"] / dt
+        rec = {"kv_bits": bits if bits is None or isinstance(bits, int)
+               else list(bits),
+               "num_pages": pages, "decode_tok_s": tps,
+               "preemptions": stats["preemptions"],
+               "decode_ticks": stats["decode_ticks"]}
+        if fp_outs is None:
+            fp_outs = outs
+        else:
+            match = total = 0
+            for r in reqs:
+                S = len(r.prompt)
+                a, b = fp_outs[r.rid][S:], outs[r.rid][S:]
+                match += int(np.sum(a == b))
+                total += len(a)
+            drift = greedy_drift(model, params, fp_outs[reqs[0].rid],
+                                 len(reqs[0].prompt), kv_bits=bits,
+                                 fp_logits=fp_replay)
+            fp_replay = drift["fp_logits"]
+            rec["token_match"] = match / max(total, 1)
+            rec["logit_drift_max_abs"] = drift["max_abs"]
+        out[name] = rec
+        row(f"engine/kv-{name}",
+            dt / max(stats["decode_tokens"], 1) * 1e6,
+            f"decode_tok_s={tps:.1f};pages={pages};"
+            f"preempt={stats['preemptions']};"
+            + (f"match={rec.get('token_match', 1.0):.2f};"
+               f"drift={rec.get('logit_drift_max_abs', 0.0):.3f}"
+               if name != "fp16" else "baseline=fp16"))
+    for name in ("int8", "haq"):
+        gain = out[name]["decode_tok_s"] / out["fp16"]["decode_tok_s"]
+        out[name]["gain_vs_fp"] = gain
+        print(f"# kv-{name}: {out[name]['decode_tok_s']:.1f} decode tok/s "
+              f"({gain:.2f}x fp) at {out[name]['num_pages']} vs "
+              f"{out['fp16']['num_pages']} pages, drift "
+              f"{out[name]['logit_drift_max_abs']:.3f}, token match "
+              f"{out[name]['token_match']:.2f}", flush=True)
+    return out
 
 
 def main():
@@ -182,6 +273,10 @@ def main():
                     help="mixed-trace size (0 skips the section)")
     ap.add_argument("--skewed-requests", type=int, default=12,
                     help="skewed-trace size (0 skips the section)")
+    ap.add_argument("--kv-requests", type=int, default=12,
+                    help="kv-quant trace size (0 skips the section)")
+    ap.add_argument("--out", default="BENCH_engine.json",
+                    help="machine-readable results file ('' disables)")
     # parse_known_args: benchmarks/run.py invokes main() with its own tag
     # arguments still on sys.argv
     args, _ = ap.parse_known_args()
@@ -189,10 +284,24 @@ def main():
     cfg = tiny_config(ARCH)
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
+    results = {
+        "schema": 1,
+        "config": {"arch": ARCH, "tiny": True, "max_batch": MAX_BATCH,
+                   "page_size": 16, "skew_max_len": SKEW_MAX_LEN,
+                   "skew_num_pages": SKEW_NUM_PAGES,
+                   "trace_seeds": TRACE_SEEDS},
+    }
     if args.requests:
-        bench_mixed(model, params, cfg, args.requests)
+        results["mixed"] = bench_mixed(model, params, cfg, args.requests)
     if args.skewed_requests:
-        bench_skewed(model, params, cfg, args.skewed_requests)
+        results["skewed"] = bench_skewed(model, params, cfg,
+                                         args.skewed_requests)
+    if args.kv_requests:
+        results["kv"] = bench_kv(model, params, cfg, args.kv_requests)
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=2, sort_keys=True)
+        print(f"# wrote {args.out}", flush=True)
 
 
 if __name__ == "__main__":

@@ -11,6 +11,11 @@ speedup step-functions at 8 bits (int8 MXU) while HBM traffic scales
 linearly with bits — which is why the learned TPU policies differ from the
 paper's BitFusion/BISMO policies (DESIGN.md §2): decode (memory-bound)
 drives weights to 2-4 bits, prefill (compute-bound) parks them at 8.
+
+Beyond weights, ``KVCacheSite``/``enumerate_kv_sites`` expose the serving
+engine's paged KV-cache pool to the same machinery (KV bits ∈ {4, 8, 16}):
+at long contexts KV bytes, not weight bytes, dominate the decode roofline.
+The search loop for those sites lives in serving/kvquant/policy.py.
 """
 from __future__ import annotations
 
@@ -20,12 +25,16 @@ from typing import Callable, Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.core import quantization as q
-from repro.core.hardware_model import Hardware, V5E_EDGE, OpCost, linear_cost
+from repro.core.hardware_model import (Hardware, V5E_EDGE, OpCost,
+                                       attention_cost, linear_cost)
 from repro.core.rl.ddpg import DDPG, DDPGConfig
 
 STATE_DIM = 10
 W_BITS = (2, 3, 4, 5, 6, 7, 8)
 A_BITS = (4, 5, 6, 7, 8, 16)
+# Storable KV-cache bitwidths: the page pool is bf16, int8, or int4 packed
+# along head_dim (serving/kvquant) — no other layouts exist at serve time.
+KV_BITS = (4, 8, 16)
 
 
 @dataclasses.dataclass
@@ -96,6 +105,94 @@ def enumerate_sites(cfg, batch: int, seq: int, *, decode=False
         proj = 2 * di + 2 * s.n_groups * s.d_state + cfg.ssm_heads
         sites += [QuantSite("ssm_in", tokens, d, proj, L),
                   QuantSite("ssm_out", tokens, di, d, L)]
+    return sites
+
+
+class KVCacheSite:
+    """One KV-cache quantization site: the k/v pages of one sub-layer slot
+    (all ``count`` layers sharing it) in the serving engine's paged pool.
+
+    Duck-types QuantSite so the HAQ machinery (state features, resource
+    accounting, budget back-off) applies unchanged — here "w_bits" are the
+    *stored KV bits* (KV_BITS: 4/8/16) and a_bits are ignored: the query is
+    always fp and dequant rides the attention block walk. Latency/energy
+    feedback comes from the same roofline (hardware_model.attention_cost
+    with ``kv_bits``) that admission.step_latency queries at serve time;
+    size is the resident KV footprint at a given batch/context.
+
+    ``local`` records the attention kind: sliding-window layers see a
+    bounded effective context, which is the sensitivity proxy
+    serving/kvquant/policy.py uses to gate which sites may drop to int4.
+    """
+
+    def __init__(self, name: str, batch: int, ctx: int, n_heads: int,
+                 n_kv: int, head_dim: int, count: int, *, window: int = 0,
+                 resident_ctx: int = 0):
+        self.name = name
+        self.batch = batch
+        self.ctx = ctx
+        self.n_heads = n_heads
+        self.n_kv = n_kv
+        self.head_dim = head_dim
+        self.count = count          # layers sharing this site
+        self.window = window
+        self.local = window > 0
+        self.eff_ctx = min(window, ctx) if window else ctx
+        # Tokens actually RESIDENT in the pool for this site. Pages are
+        # shared across layers, so a local layer's dead blocks are only
+        # freed when every layer is local (Scheduler.trim_window); next to
+        # any global layer they stay resident and must be priced at full
+        # context even though the walk (latency) only reads the window.
+        self.resident_ctx = resident_ctx or self.eff_ctx
+        # QuantSite-compatible state features for the DDPG agent
+        self.d_in = n_kv * head_dim
+        self.d_out = self.eff_ctx
+        self.cost: OpCost = self._cost(16)
+
+    def _cost(self, kv_bits: int) -> OpCost:
+        return attention_cost(self.batch, 1, self.ctx, self.n_heads,
+                              self.n_kv, self.head_dim, window=self.window,
+                              decode=True, kv_bits=kv_bits)
+
+    def latency(self, hw, w_bits, a_bits=16) -> float:
+        return float(self._cost(int(w_bits)).latency(hw)) * self.count
+
+    def energy(self, hw, w_bits, a_bits=16) -> float:
+        return float(self._cost(int(w_bits)).energy(hw)) * self.count
+
+    def size_bytes(self, w_bits) -> float:
+        """Resident KV bytes at this batch/context (codes + scale tiles)."""
+        toks = self.batch * self.resident_ctx
+        bytes_tok = 2.0 * self.n_kv * self.head_dim * int(w_bits) / 8.0
+        if int(w_bits) < 16:
+            bytes_tok += 2.0 * self.n_kv * 4.0
+        return toks * bytes_tok * self.count
+
+
+def enumerate_kv_sites(cfg, batch: int, ctx: int) -> List[KVCacheSite]:
+    """One KVCacheSite per sub-layer slot of the serving pool — the KV
+    analogue of enumerate_sites, matching the pool pytree's ``sub{j}`` keys
+    (models/transformer.py::pool_specs) so a searched policy maps directly
+    onto the quantized page-pool layout."""
+    if cfg.family not in ("dense", "moe", "vlm"):
+        raise NotImplementedError(
+            f"KV sites describe attention page pools; {cfg.family!r} "
+            f"families have no paged KV cache")
+    # the pool pytree's own period/kind rules — deferred import keeps core
+    # free of a hard models dependency (models never imports core)
+    from repro.models.transformer import period_of, sublayer_kinds
+    P = period_of(cfg)
+    kinds = sublayer_kinds(cfg)
+    n_groups = cfg.num_layers // P
+    all_local = all(k["attn"] == "local" for k in kinds)
+    sites = []
+    for j in range(P):
+        window = cfg.window_size if kinds[j]["attn"] == "local" else 0
+        sites.append(KVCacheSite(
+            f"kv_sub{j}", batch, ctx, cfg.num_heads, cfg.num_kv_heads,
+            cfg.resolved_head_dim, n_groups, window=window,
+            # window-trimmed residency only exists on all-local models
+            resident_ctx=0 if all_local else ctx))
     return sites
 
 

@@ -120,10 +120,17 @@ def linear_cost(tokens: int, d_in: int, d_out: int, *, tp: int = 1,
 
 def attention_cost(batch: int, q_len: int, kv_len: int, n_heads: int,
                    n_kv: int, head_dim: int, *, window: int = 0,
-                   decode: bool = False) -> OpCost:
+                   decode: bool = False, kv_bits: int = 16) -> OpCost:
+    """``kv_bits`` scales the KV-cache read traffic (the decode memory-
+    roofline term) for a HAQ-quantized page pool: int8 halves it, int4
+    quarters it, plus the fp32 per-token per-head scale tiles the pool
+    stores alongside the codes (serving/kvquant). Compute is unchanged —
+    dequant rides the block walk on the VPU."""
     eff_kv = min(window, kv_len) if window else kv_len
     flops = 4.0 * batch * q_len * eff_kv * n_heads * head_dim
-    kv_bytes = 2.0 * batch * eff_kv * n_kv * head_dim * 2.0
+    kv_bytes = 2.0 * batch * eff_kv * n_kv * head_dim * 2.0 * (kv_bits / 16.0)
+    if kv_bits < 16:
+        kv_bytes += 2.0 * batch * eff_kv * n_kv * 4.0   # scale tiles
     act = 2.0 * batch * q_len * n_heads * head_dim * 2.0
     return OpCost(flops=jnp.asarray(flops),
                   weight_bytes=jnp.asarray(0.0),

@@ -123,3 +123,25 @@ def paged_attention(q, pool_k, pool_v, page_table, positions, *,
     return pa.paged_attention_fwd(q, pool_k, pool_v, page_table, positions,
                                   window=window, cap=cap,
                                   interpret=_interpret())
+
+
+def paged_attention_quant(q, pool_k, k_scale, pool_v, v_scale, page_table,
+                          positions, *, window=0, cap=0.0,
+                          mode: str = "auto") -> jax.Array:
+    """Paged-attention decode over a quantized KV page pool.
+
+    pool_k/v are int8 (int4 packed along head_dim — bitwidth is inferred
+    from the stored minor-dim size) with (P, page, K) fp32 scales. Same
+    dispatch contract as paged_attention; every path dequantizes block-by-
+    block inside the walk and never materializes a dense fp KV view."""
+    if mode == "auto":
+        mode = "ref" if _interpret() else "pallas"
+    if mode == "ref":
+        return ref.paged_attention_quant_ref(
+            q, pool_k, k_scale, pool_v, v_scale, page_table, positions,
+            window=window, cap=cap)
+    if mode != "pallas":
+        raise ValueError(f"unknown paged-attention mode {mode!r}")
+    return pa.paged_attention_quant_fwd(
+        q, pool_k, k_scale, pool_v, v_scale, page_table, positions,
+        window=window, cap=cap, interpret=_interpret())

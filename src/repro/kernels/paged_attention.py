@@ -25,6 +25,13 @@ assumes.
 Forward-only by design (decode). Validated against the dense oracle in
 tests/test_kernels.py (interpret mode); the pure-JAX block-walk twin used
 as the CPU fallback lives in kernels/ref.py::paged_attention_ref.
+
+``paged_attention_quant_fwd`` is the fused-dequant variant for the HAQ
+KV-quantized page pool (serving/kvquant): pages arrive int8 (int4 packed
+two-per-byte along head_dim) with per-page-slot per-head fp32 scale tiles
+that ride the same scalar-prefetched page-table walk, and dequantization
+happens inside the online-softmax block loop — one (page, hd) fp tile in
+VMEM at a time, never a dense fp KV view in HBM.
 """
 from __future__ import annotations
 
@@ -35,9 +42,69 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import ref
+
 F32 = jnp.float32
 NEG = -1e30
 LANES = 128  # scratch minor dim, aligned to the VPU lane width
+
+
+def _block_update(q, k, v, pos, i, *, page, window, cap,
+                  m_ref, l_ref, acc_ref):
+    """Masked online-softmax accumulation of one fp32 (page, hd) KV block —
+    the math both the fp and the fused-dequant kernels must agree on
+    exactly, kept in one place. q (G, hd) pre-scaled fp32."""
+    G = q.shape[0]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=F32)        # (G, page)
+    if cap:
+        s = cap * jnp.tanh(s / cap)
+    kpos = i * page + jax.lax.broadcasted_iota(jnp.int32, (G, page), 1)
+    valid = kpos <= pos
+    if window:
+        valid &= kpos > pos - window
+    s = jnp.where(valid, s, NEG)
+
+    m_prev = m_ref[:, :1]                                      # (G, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    corr = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)
+    m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+    l_ref[...] = l_ref[...] * corr \
+        + jnp.broadcast_to(jnp.sum(p, axis=-1, keepdims=True),
+                           l_ref.shape)
+    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=F32)
+
+
+def _block_range(pos, page, window):
+    """(lo, hi) inclusive block range a query at ``pos`` must walk."""
+    hi = pos // page                       # last block holding a live token
+    lo = jnp.maximum((pos - window + 1) // page, 0) if window else 0
+    return lo, hi
+
+
+def _init_scratch(m_ref, l_ref, acc_ref):
+    m_ref[...] = jnp.full_like(m_ref, NEG)
+    l_ref[...] = jnp.zeros_like(l_ref)
+    acc_ref[...] = jnp.zeros_like(acc_ref)
+
+
+def _finalize_out(o_ref, l_ref, acc_ref):
+    out = acc_ref[...] / jnp.maximum(l_ref[:, :1], 1e-30)
+    o_ref[...] = out.reshape(o_ref.shape).astype(o_ref.dtype)
+
+
+def _kv_index_map(page, window):
+    """Shared BlockSpec index map for the page-table walk: clamp skipped
+    blocks onto an in-range (already fetched) page so no fresh DMA is
+    pipelined for them; pl.when skips their compute."""
+    def kv_map(b, k, i, pt, pos):
+        p = pos[b]
+        lo, hi = _block_range(p, page, window)
+        ic = jnp.clip(i, lo, hi) if window else jnp.minimum(i, hi)
+        return (pt[b, ic], 0, k, 0)
+    return kv_map
 
 
 def _paged_kernel(pt_ref, pos_ref, q_ref, k_ref, v_ref, o_ref,
@@ -48,48 +115,23 @@ def _paged_kernel(pt_ref, pos_ref, q_ref, k_ref, v_ref, o_ref,
     b = pl.program_id(0)
     i = pl.program_id(2)
     pos = pos_ref[b]
-    hi = pos // page                       # last block holding a live token
-    if window:
-        lo = jnp.maximum((pos - window + 1) // page, 0)
-    else:
-        lo = 0
+    lo, hi = _block_range(pos, page, window)
 
     @pl.when(i == 0)
     def _init():
-        m_ref[...] = jnp.full_like(m_ref, NEG)
-        l_ref[...] = jnp.zeros_like(l_ref)
-        acc_ref[...] = jnp.zeros_like(acc_ref)
+        _init_scratch(m_ref, l_ref, acc_ref)
 
     @pl.when((i >= lo) & (i <= hi))
     def _block():
         q = q_ref[...].reshape(G, hd).astype(F32) * scale
         k = k_ref[...].reshape(page, hd).astype(F32)
         v = v_ref[...].reshape(page, hd).astype(F32)
-        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
-                                preferred_element_type=F32)    # (G, page)
-        if cap:
-            s = cap * jnp.tanh(s / cap)
-        kpos = i * page + jax.lax.broadcasted_iota(jnp.int32, (G, page), 1)
-        valid = kpos <= pos
-        if window:
-            valid &= kpos > pos - window
-        s = jnp.where(valid, s, NEG)
-
-        m_prev = m_ref[:, :1]                                  # (G, 1)
-        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
-        corr = jnp.exp(m_prev - m_new)
-        p = jnp.exp(s - m_new)
-        m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
-        l_ref[...] = l_ref[...] * corr \
-            + jnp.broadcast_to(jnp.sum(p, axis=-1, keepdims=True),
-                               l_ref.shape)
-        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
-            p, v, (((1,), (0,)), ((), ())), preferred_element_type=F32)
+        _block_update(q, k, v, pos, i, page=page, window=window, cap=cap,
+                      m_ref=m_ref, l_ref=l_ref, acc_ref=acc_ref)
 
     @pl.when(i == n_blocks - 1)
     def _finalize():
-        out = acc_ref[...] / jnp.maximum(l_ref[:, :1], 1e-30)
-        o_ref[...] = out.reshape(o_ref.shape).astype(o_ref.dtype)
+        _finalize_out(o_ref, l_ref, acc_ref)
 
 
 @functools.partial(jax.jit, static_argnames=("window", "cap", "interpret"))
@@ -108,18 +150,7 @@ def paged_attention_fwd(q, pool_k, pool_v, page_table, positions, *,
     kernel = functools.partial(_paged_kernel, page=page, G=G, hd=hd,
                                window=window, cap=cap, scale=scale,
                                n_blocks=n_blocks)
-
-    def kv_map(b, k, i, pt, pos):
-        # clamp skipped blocks onto an in-range (already fetched) page so no
-        # fresh DMA is pipelined for them; pl.when skips their compute.
-        p = pos[b]
-        hi = p // page
-        if window:
-            lo = jnp.maximum((p - window + 1) // page, 0)
-            ic = jnp.clip(i, lo, hi)
-        else:
-            ic = jnp.minimum(i, hi)
-        return (pt[b, ic], 0, k, 0)
+    kv_map = _kv_index_map(page, window)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
@@ -143,4 +174,102 @@ def paged_attention_fwd(q, pool_k, pool_v, page_table, positions, *,
         out_shape=jax.ShapeDtypeStruct((B, K, G, hd), q.dtype),
         interpret=interpret,
     )(page_table, positions, qr, pool_k, pool_v)
+    return out.reshape(B, H, hd)
+
+
+# ------------------------------------------------- fused-dequant variant ----
+def _paged_quant_kernel(pt_ref, pos_ref, q_ref, k_ref, ks_ref, v_ref, vs_ref,
+                        o_ref, m_ref, l_ref, acc_ref, *, page, G, hd, bits,
+                        window, cap, scale, n_blocks):
+    # q_ref: (1, 1, G, hd) fp; k_ref/v_ref: (1, page, 1, hd_store) int8, one
+    # physical page of this kv head; ks_ref/vs_ref: (1, page, 1) fp32 scales
+    # riding the same scalar-prefetched page-table walk as the int8 pages.
+    # Dequant happens here, inside the online-softmax block loop — the only
+    # fp KV ever materialized is one (page, hd) tile in VMEM. Everything
+    # past the load is _block_update, shared with the fp kernel.
+    b = pl.program_id(0)
+    i = pl.program_id(2)
+    pos = pos_ref[b]
+    lo, hi = _block_range(pos, page, window)
+
+    @pl.when(i == 0)
+    def _init():
+        _init_scratch(m_ref, l_ref, acc_ref)
+
+    @pl.when((i >= lo) & (i <= hi))
+    def _block():
+        q = q_ref[...].reshape(G, hd).astype(F32) * scale
+
+        def dequant(int_ref, scale_ref):
+            qv = int_ref[...].reshape(page, -1)
+            if bits == 4:
+                # the storage mapping's single source of truth (static
+                # shapes, jnp-only — fine inside the kernel body)
+                qv = ref.unpack_int4_hd(qv)
+            return qv.astype(F32) * scale_ref[...].reshape(page, 1)
+
+        _block_update(q, dequant(k_ref, ks_ref), dequant(v_ref, vs_ref),
+                      pos, i, page=page, window=window, cap=cap,
+                      m_ref=m_ref, l_ref=l_ref, acc_ref=acc_ref)
+
+    @pl.when(i == n_blocks - 1)
+    def _finalize():
+        _finalize_out(o_ref, l_ref, acc_ref)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "cap", "interpret"))
+def paged_attention_quant_fwd(q, pool_k, k_scale, pool_v, v_scale,
+                              page_table, positions, *, window=0, cap=0.0,
+                              interpret=False):
+    """Fused dequantizing paged-attention decode.
+
+    q (B, H, hd) fp; pool_k/v (P, page, K, hd_store) int8 with hd_store = hd
+    (int8 KV) or hd//2 (int4 packed along head_dim); k_scale/v_scale
+    (P, page, K) fp32 per-page-slot per-head scales; page_table (B,
+    n_blocks) int32 (unused tails -> scratch page 0); positions (B,) int32.
+
+    The scale tiles use the same scalar-prefetch index map as their pages,
+    so the page-table walk resolves both DMAs before issue; dequantization
+    happens inside the online-softmax block loop and no dense fp KV view is
+    ever materialized. Returns (B, H, hd) in q.dtype."""
+    B, H, hd = q.shape
+    _, page, K, hd_store = pool_k.shape
+    bits = ref.kv_bits_of(pool_k, hd)
+    G = H // K
+    n_blocks = page_table.shape[1]
+    scale = hd ** -0.5
+    qr = q.reshape(B, K, G, hd)
+
+    kernel = functools.partial(_paged_quant_kernel, page=page, G=G, hd=hd,
+                               bits=bits, window=window, cap=cap, scale=scale,
+                               n_blocks=n_blocks)
+    kv_map = _kv_index_map(page, window)
+
+    def scale_map(b, k, i, pt, pos):
+        return kv_map(b, k, i, pt, pos)[:3]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, K, n_blocks),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, hd), lambda b, k, i, pt, pos: (b, k, 0, 0)),
+            pl.BlockSpec((1, page, 1, hd_store), kv_map),
+            pl.BlockSpec((1, page, 1), scale_map),
+            pl.BlockSpec((1, page, 1, hd_store), kv_map),
+            pl.BlockSpec((1, page, 1), scale_map),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, hd),
+                               lambda b, k, i, pt, pos: (b, k, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, LANES), F32),    # running max m
+            pltpu.VMEM((G, LANES), F32),    # running sum l
+            pltpu.VMEM((G, hd), F32),       # output accumulator
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, K, G, hd), q.dtype),
+        interpret=interpret,
+    )(page_table, positions, qr, pool_k, k_scale, pool_v, v_scale)
     return out.reshape(B, H, hd)

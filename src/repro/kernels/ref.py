@@ -71,29 +71,112 @@ def quant_matmul_w8a8(x_q: jax.Array, x_scale: jax.Array, w_q: jax.Array,
     return (acc.astype(F32) * x_scale * w_scale[None, :]).astype(out_dtype)
 
 
+# ----------------------------------------------------- KV-cache quant ------
+def kv_qmax(bits: int) -> float:
+    """Symmetric integer range for a KV bitwidth (int8 -> 127, int4 -> 7)."""
+    if bits not in (4, 8):
+        raise ValueError(f"KV cache bits must be 4 or 8, got {bits}")
+    return 2.0 ** (bits - 1) - 1.0
+
+
+def pack_int4_hd(q: jax.Array) -> jax.Array:
+    """Pack int4 codes two-per-byte along head_dim (the minor axis):
+    element 2i rides the low nibble, 2i+1 the high nibble.
+    (..., hd) int8 in [-7, 7] -> (..., hd//2) int8."""
+    assert q.shape[-1] % 2 == 0, q.shape
+    lo = q[..., 0::2] & 0x0F
+    hi = (q[..., 1::2] & 0x0F) << 4
+    return (lo | hi).astype(jnp.int8)
+
+
+def unpack_int4_hd(packed: jax.Array) -> jax.Array:
+    """Inverse of pack_int4_hd: (..., hd//2) int8 -> (..., hd) int8 in
+    [-7, 7] (arithmetic shifts sign-extend the nibbles)."""
+    lo = (packed.astype(jnp.int8) << 4) >> 4
+    hi = packed.astype(jnp.int8) >> 4
+    out = jnp.stack([lo, hi], axis=-1)            # (..., hd//2, 2)
+    return out.reshape(*packed.shape[:-1], packed.shape[-1] * 2)
+
+
+def quantize_kv(x: jax.Array, bits: int, *, granularity: str = "token"):
+    """Symmetric per-head KV quantization (the pool-write semantics).
+
+    x (..., K, hd) — any number of leading axes; for ``granularity="page"``
+    the third-from-last axis is the page-slot axis.
+
+    granularity:
+      "token" — one scale per (leading..., K): amax over hd only. This is
+                what the paged pool stores (each page carries a
+                (page_size, K) fp32 scale tile), because decode writes one
+                token at a time and must never re-scale a page in place.
+      "page"  — one scale per (page, K) pair: amax over (slot, hd). Coarser;
+                kept for the scale-granularity error-bound study
+                (tests/test_kvquant.py) and offline pool conversion.
+
+    Returns (stored, scale): stored int8, packed along hd when bits == 4;
+    scale fp32 with the reduced axes dropped ("token" -> x.shape[:-1],
+    "page" -> x.shape[:-3] + (K,))."""
+    qmax = kv_qmax(bits)
+    xf = x.astype(F32)
+    if granularity == "token":
+        amax = jnp.max(jnp.abs(xf), axis=-1)                 # (..., K)
+        scale = amax / qmax + 1e-12
+        div = scale[..., None]
+    elif granularity == "page":
+        amax = jnp.max(jnp.abs(xf), axis=(-3, -1))           # (..., K)
+        scale = amax / qmax + 1e-12
+        div = scale[..., None, :, None]
+    else:
+        raise ValueError(f"unknown scale granularity {granularity!r}")
+    q = jnp.clip(jnp.round(xf / div), -qmax, qmax).astype(jnp.int8)
+    if bits == 4:
+        q = pack_int4_hd(q)
+    return q, scale.astype(F32)
+
+
+def dequantize_kv(stored: jax.Array, scale: jax.Array, bits: int, *,
+                  granularity: str = "token") -> jax.Array:
+    """Inverse of quantize_kv -> f32. Exact inverse of the storage mapping;
+    |x - dequantize_kv(*quantize_kv(x, bits))| <= scale/2 elementwise."""
+    q = unpack_int4_hd(stored) if bits == 4 else stored
+    if granularity == "token":
+        return q.astype(F32) * scale[..., None]
+    if granularity == "page":
+        return q.astype(F32) * scale[..., None, :, None]
+    raise ValueError(f"unknown scale granularity {granularity!r}")
+
+
+def kv_bits_of(stored: jax.Array, hd: int) -> int:
+    """Infer the stored KV bitwidth from the minor-axis size (int4 packs two
+    codes per byte along hd, so the shape itself encodes the bitwidth —
+    static under tracing)."""
+    if stored.shape[-1] == hd:
+        return 8
+    if stored.shape[-1] * 2 == hd:
+        return 4
+    raise ValueError(
+        f"stored KV minor dim {stored.shape[-1]} matches neither int8 ({hd}) "
+        f"nor packed int4 ({hd // 2})")
+
+
 # ------------------------------------------------------ paged attention ----
-def paged_attention_ref(q, pool_k, pool_v, page_table, positions, *,
-                        window=0, cap=0.0):
-    """Block-walking paged decode attention (the CPU serving fallback and
-    the semantics oracle for kernels/paged_attention.py).
+def _paged_block_walk(q, load_k, load_v, K, hd, page, n_blocks, positions, *,
+                      window, cap):
+    """Shared block-walk body for the fp and quantized pure-JAX paged
+    attention refs — the semantics both must agree on exactly, kept in one
+    place (the Pallas twins share _block_update the same way). ``load_k``/
+    ``load_v`` map a block index to its fp32 (B, page, K, hd) tile — a pool
+    gather for the fp path, gather + dequant for the quantized one.
 
-    q (B, H, hd) one query token per sequence; pool_k/v (P, page, K, hd);
-    page_table (B, n_blocks) int32, unused tails pointing at scratch page 0;
-    positions (B,) int32 absolute position of the query token (== index of
-    the newest cached token). H = K*G (GQA).
-
-    Walks each sequence's pages with `lax.fori_loop` over the data-dependent
-    block range — ``[min(pos-window+1), max(pos)]`` across the batch — so
-    the dense chronological (B, n_blocks*page, K, hd) KV view is never
-    built and local-window layers do window-trimmed walks instead of
-    full-length masking. Scores are staged per-block into a (B,K,G,T) fp32
-    buffer so the softmax itself is a single full-row pass, matching the
-    dense path's normalization exactly.
-    """
-    B, H, hd = q.shape
-    _, page, K, _ = pool_k.shape
+    Walks `lax.fori_loop` over the data-dependent block range —
+    ``[min(pos-window+1), max(pos)]`` across the batch — so the dense
+    chronological (B, n_blocks*page, K, hd) KV view is never built and
+    local-window layers do window-trimmed walks instead of full-length
+    masking. Scores are staged per-block into a (B,K,G,T) fp32 buffer so
+    the softmax itself is a single full-row pass, matching the dense
+    path's normalization exactly."""
+    B, H, _ = q.shape
     G = H // K
-    n_blocks = page_table.shape[1]
     T = n_blocks * page
     scale = hd ** -0.5
     NEG = -2.0 ** 30
@@ -106,8 +189,7 @@ def paged_attention_ref(q, pool_k, pool_v, page_table, positions, *,
         lo = jnp.zeros((), jnp.int32)
 
     def score_block(i, s_buf):
-        kb = pool_k[page_table[:, i]].astype(F32)          # (B, page, K, hd)
-        s = jnp.einsum("bkgd,bpkd->bkgp", qf, kb) * scale
+        s = jnp.einsum("bkgd,bpkd->bkgp", qf, load_k(i)) * scale
         if cap:
             s = cap * jnp.tanh(s / cap)
         kpos = i * page + jnp.arange(page)
@@ -122,12 +204,29 @@ def paged_attention_ref(q, pool_k, pool_v, page_table, positions, *,
     w = jax.nn.softmax(s_buf, axis=-1)
 
     def pv_block(i, acc):
-        vb = pool_v[page_table[:, i]].astype(F32)
         wb = jax.lax.dynamic_slice(w, (0, 0, 0, i * page), (B, K, G, page))
-        return acc + jnp.einsum("bkgp,bpkd->bkgd", wb, vb)
+        return acc + jnp.einsum("bkgp,bpkd->bkgd", wb, load_v(i))
 
     o = jax.lax.fori_loop(lo, hi, pv_block, jnp.zeros((B, K, G, hd), F32))
     return o.reshape(B, H, hd).astype(q.dtype)
+
+
+def paged_attention_ref(q, pool_k, pool_v, page_table, positions, *,
+                        window=0, cap=0.0):
+    """Block-walking paged decode attention (the CPU serving fallback and
+    the semantics oracle for kernels/paged_attention.py).
+
+    q (B, H, hd) one query token per sequence; pool_k/v (P, page, K, hd);
+    page_table (B, n_blocks) int32, unused tails pointing at scratch page 0;
+    positions (B,) int32 absolute position of the query token (== index of
+    the newest cached token). H = K*G (GQA). Walk semantics in
+    _paged_block_walk."""
+    hd = q.shape[-1]
+    _, page, K, _ = pool_k.shape
+    return _paged_block_walk(
+        q, lambda i: pool_k[page_table[:, i]].astype(F32),
+        lambda i: pool_v[page_table[:, i]].astype(F32),
+        K, hd, page, page_table.shape[1], positions, window=window, cap=cap)
 
 
 def paged_attention_dense_ref(q, pool_k, pool_v, page_table, positions, *,
@@ -156,6 +255,38 @@ def paged_attention_dense_ref(q, pool_k, pool_v, page_table, positions, *,
     w = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bhk,bkhd->bhd", w, v.astype(F32))
     return out.astype(q.dtype)
+
+
+def paged_attention_quant_ref(q, pool_k, k_scale, pool_v, v_scale,
+                              page_table, positions, *, window=0, cap=0.0):
+    """Block-walking paged decode attention over a *quantized* page pool
+    (the CPU serving fallback and the semantics oracle for the fused-dequant
+    Pallas kernel).
+
+    q (B, H, hd) fp; pool_k/v (P, page, K, hd_store) int8 — hd_store == hd
+    for int8 KV, hd // 2 for int4 packed along head_dim (pack_int4_hd);
+    k_scale/v_scale (P, page, K) fp32 per-page-slot, per-kv-head scales;
+    page_table (B, n_blocks) int32 with unused tails on scratch page 0;
+    positions (B,) int32.
+
+    Pages are dequantized one block at a time inside the walk — each block
+    materializes only a (B, page, K, hd) fp tile; the dense chronological
+    (B, n_blocks*page, K, hd) fp KV view is never built (asserted on the
+    decode jaxpr in tests/test_kvquant.py). Walk semantics shared with the
+    fp ref via _paged_block_walk."""
+    hd = q.shape[-1]
+    _, page, K, _ = pool_k.shape
+    bits = kv_bits_of(pool_k, hd)
+
+    def loader(pool, scales):
+        def load(i):
+            pids = page_table[:, i]
+            return dequantize_kv(pool[pids], scales[pids], bits)
+        return load
+
+    return _paged_block_walk(
+        q, loader(pool_k, k_scale), loader(pool_v, v_scale),
+        K, hd, page, page_table.shape[1], positions, window=window, cap=cap)
 
 
 # ------------------------------------------------------ flash attention ----

@@ -4,6 +4,8 @@ reference baseline for equivalence tests and throughput comparisons.
 
 ``python -m repro.launch.serve --arch gemma2-2b --tiny --requests 8``
 ``python -m repro.launch.serve --arch gemma2-2b --tiny --sequential``
+``python -m repro.launch.serve --arch gemma2-2b --tiny --kv-bits 8``
+``python -m repro.launch.serve --arch gemma2-2b --tiny --kv-policy haq``
 """
 from __future__ import annotations
 
@@ -181,12 +183,30 @@ def main():
     ap.add_argument("--quant-policy", default="",
                     help="json file: {site: [w_bits, a_bits]} "
                          "(sequential mode only)")
+    ap.add_argument("--kv-bits", type=int, default=16,
+                    choices=(4, 8, 16),
+                    help="engine mode: stored KV-cache bits for the paged "
+                         "pool, uniform across layers (16 = bf16 exact "
+                         "baseline; 8/4 = serving/kvquant int pages with "
+                         "per-token per-head scales, dequant fused into "
+                         "the paged-attention walk)")
+    ap.add_argument("--kv-policy", default="",
+                    help="engine mode: per-layer KV bit policy — 'haq' "
+                         "runs the HAQ search over KV sites "
+                         "(serving/kvquant/policy.py: roofline feedback, "
+                         "sensitivity-gated int4), or a json file mapping "
+                         "sub-layer slots to bits, e.g. "
+                         "'{\"sub0\": 4, \"sub1\": 8}'. Overrides "
+                         "--kv-bits")
     args = ap.parse_args()
     if args.prompt_len < 1:
         ap.error("--prompt-len must be >= 1")
     if args.quant_policy and not args.sequential:
         ap.error("--quant-policy applies to --sequential mode only; the "
                  "engine derives its quantization from the admission policy")
+    if args.sequential and (args.kv_policy or args.kv_bits != 16):
+        ap.error("--kv-bits/--kv-policy apply to engine mode only; the "
+                 "sequential baseline is the fp exactness reference")
 
     cfg = tiny_config(args.arch) if args.tiny else get_config(args.arch)
     model = build_model(cfg)
@@ -222,16 +242,32 @@ def main():
     occupancy = args.expected_occupancy
     if occupancy is None:
         occupancy = 1.0 if args.reserve_upfront else 0.5
+
+    kv_bits = None if args.kv_bits == 16 else args.kv_bits
+    if args.kv_policy == "haq":
+        from repro.serving.kvquant import search_kv_policy
+        res = search_kv_policy(cfg, hw, max_model_len=max_len, episodes=8)
+        kv_bits = res["bits"]
+        print(f"kvquant[haq]: {res['policy']} "
+              f"({res['kv_bytes_per_token_fp']}->"
+              f"{res['kv_bytes_per_token']} B/token)")
+    elif args.kv_policy:
+        from repro.models.transformer import normalize_kv_bits
+        kv_bits = normalize_kv_bits(
+            cfg, json.load(open(args.kv_policy)))
+
     policy = derive_policy(cfg, hw, max_model_len=max_len,
                            page_size=args.page_size,
                            expected_occupancy=occupancy,
-                           param_bytes=model.param_bytes())
+                           param_bytes=model.param_bytes(),
+                           kv_bits=kv_bits)
     if args.max_batch:
         import dataclasses
         policy = dataclasses.replace(policy, max_batch=args.max_batch)
     print(f"admission[{hw.name}]: max_batch={policy.max_batch} "
           f"prefill_chunk={policy.prefill_chunk} "
-          f"quant={policy.quant_bits}b pages={policy.num_pages} "
+          f"quant={policy.quant_bits}b "
+          f"kv={policy.kv_bits or 'bf16'} pages={policy.num_pages} "
           f"page_size={policy.page_size} "
           f"(est decode {policy.est_decode_s * 1e3:.2f}ms/step)")
     engine = Engine(model, params, policy, temperature=args.temperature,

@@ -108,12 +108,16 @@ class Model:
         return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
                             self.cache_specs(batch, seq_len))
 
-    def pool_specs(self, num_pages: int, page_size: int):
-        return transformer.pool_specs(self.cfg, num_pages, page_size)
+    def pool_specs(self, num_pages: int, page_size: int, kv_bits=None):
+        """``kv_bits`` selects the HAQ KV-quantized pool layout (int8/int4
+        pages + per-page-slot scales) per sub-layer slot; None keeps the
+        bf16 pool. See transformer.pool_specs / serving/kvquant."""
+        return transformer.pool_specs(self.cfg, num_pages, page_size,
+                                      kv_bits=kv_bits)
 
-    def init_pool(self, num_pages: int, page_size: int):
+    def init_pool(self, num_pages: int, page_size: int, kv_bits=None):
         return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
-                            self.pool_specs(num_pages, page_size))
+                            self.pool_specs(num_pages, page_size, kv_bits))
 
     def input_specs(self, shape) -> Dict[str, Any]:
         """ShapeDtypeStruct stand-ins for one step's inputs (dry-run)."""

@@ -19,6 +19,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import ops as kops
+from repro.kernels import ref as kref
 from repro.models import flash as flash_lib
 from repro.models.layers import apply_rope, softcap
 from repro.models.params import PDef
@@ -207,25 +208,52 @@ def attention_decode_paged(p, x, pool_k, pool_v, page_table, positions,
     at cache-write time with absolute positions, the page walk matches a
     dense chronological cache to fp32-accumulation precision.
 
+    Quantized pools (serving/kvquant): ``pool_k``/``pool_v`` may instead be
+    ``{"q": int8 pages, "scale": fp32 (P, page, K)}`` dicts — the stored
+    bitwidth (int8, or int4 packed along head_dim) is inferred from the
+    stored minor-dim size. The incoming token's k/v are quantized on write
+    (per-token per-head symmetric scales, the same mapping the engine's
+    prefill writer uses), and attention runs the fused-dequant walk — no
+    dense fp KV view is materialized on either path.
+
     ``ac`` (sequence-parallel decode hints) applies to the dense decode
     path only; the paged walk is the single-host engine path and ignores it
     (sharded paged decode is a ROADMAP item).
 
     Returns (out (B,1,D), pool_k, pool_v).
     """
-    page = pool_k.shape[1]
+    quantized = isinstance(pool_k, dict)
+    page = (pool_k["q"] if quantized else pool_k).shape[1]
     q, k_new, v_new = qkv(p, x, cfg.rope_theta, positions[:, None], dot=dot)
     pids = jnp.take_along_axis(page_table, (positions // page)[:, None],
                                axis=1)[:, 0]
     slots = positions % page
-    pool_k = pool_k.at[pids, slots].set(k_new[:, 0],
-                                        mode="promise_in_bounds")
-    pool_v = pool_v.at[pids, slots].set(v_new[:, 0],
-                                        mode="promise_in_bounds")
     window = cfg.window_size if kind == "local" else 0
-    o = kops.paged_attention(q[:, 0], pool_k, pool_v, page_table, positions,
-                             window=window, cap=cfg.attn_softcap,
-                             mode=kernel)[:, None]
+    if quantized:
+        hd = q.shape[-1]
+        bits = kref.kv_bits_of(pool_k["q"], hd)
+
+        def write(pool, new):                        # new: (B, K, hd)
+            qv, sc = kref.quantize_kv(new, bits)
+            return {"q": pool["q"].at[pids, slots].set(
+                        qv, mode="promise_in_bounds"),
+                    "scale": pool["scale"].at[pids, slots].set(
+                        sc, mode="promise_in_bounds")}
+
+        pool_k = write(pool_k, k_new[:, 0])
+        pool_v = write(pool_v, v_new[:, 0])
+        o = kops.paged_attention_quant(
+            q[:, 0], pool_k["q"], pool_k["scale"], pool_v["q"],
+            pool_v["scale"], page_table, positions, window=window,
+            cap=cfg.attn_softcap, mode=kernel)[:, None]
+    else:
+        pool_k = pool_k.at[pids, slots].set(k_new[:, 0],
+                                            mode="promise_in_bounds")
+        pool_v = pool_v.at[pids, slots].set(v_new[:, 0],
+                                            mode="promise_in_bounds")
+        o = kops.paged_attention(q[:, 0], pool_k, pool_v, page_table,
+                                 positions, window=window,
+                                 cap=cfg.attn_softcap, mode=kernel)[:, None]
     dot_o = dot or (lambda a, w, name: jnp.einsum(
         "bsnh,nhd->bsd", a, w))
     return dot_o(o, p["wo"], "attn_o"), pool_k, pool_v

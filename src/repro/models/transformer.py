@@ -469,13 +469,66 @@ def decode_step_paged(params, pool, page_table, token, positions, cfg, *,
     return logits, new_pool
 
 
-def pool_specs(cfg, num_pages: int, page_size: int):
+def normalize_kv_bits(cfg, kv_bits) -> Optional[Tuple[int, ...]]:
+    """Canonicalize a KV bit spec to one entry per sub-layer slot.
+
+    Accepts None (fp pool), an int (uniform), a dict keyed ``sub{j}`` or
+    ``kv_sub{j}`` (the HAQ site names — a searched policy round-trips
+    as-is; missing slots default to 16, unknown keys are rejected rather
+    than silently dropping quantization), or a sequence cycled over the
+    period like ``attn_pattern``. All-16 collapses to None so the fp pool
+    layout (and its bit-exact serving path) stays the default
+    representation."""
+    if kv_bits is None:
+        return None
+    P = period_of(cfg)
+    if isinstance(kv_bits, int):
+        bits = (kv_bits,) * P
+    elif isinstance(kv_bits, dict):
+        by_slot = {}
+        for key, v in kv_bits.items():
+            slot = key[3:] if key.startswith("kv_sub") else key
+            j = int(slot[3:]) if slot.startswith("sub") \
+                and slot[3:].isdigit() else -1
+            if not 0 <= j < P:
+                raise ValueError(f"unknown KV policy key {key!r} "
+                                 f"(period-{P} pool has sub0..sub{P - 1})")
+            by_slot[j] = int(v)
+        bits = tuple(by_slot.get(j, 16) for j in range(P))
+    else:
+        seq = tuple(int(b) for b in kv_bits)
+        if not seq or P % len(seq):
+            raise ValueError(f"kv_bits length {len(seq)} does not cycle "
+                             f"into period {P}")
+        bits = tuple(seq[j % len(seq)] for j in range(P))
+    for b in bits:
+        if b not in (4, 8, 16):
+            raise ValueError(f"KV bits must be 4, 8 or 16, got {b}")
+    if all(b == 16 for b in bits):
+        return None
+    if any(b == 4 for b in bits) and cfg.resolved_head_dim % 2:
+        raise ValueError("int4 KV packs two codes per byte along head_dim; "
+                         f"head_dim={cfg.resolved_head_dim} is odd")
+    return bits
+
+
+def pool_specs(cfg, num_pages: int, page_size: int, kv_bits=None):
     """Abstract paged-KV-pool pytree: per sub-layer slot, k/v pools of shape
     (n_groups, num_pages, page_size, K, hd). Page ids are shared across
     layers — one logical page allocation covers every layer's pool. Local
     (sliding-window) layers use the same full-length pages and are masked to
-    the window at attention time (per-layer window-trimmed pools are an open
-    item, see ROADMAP)."""
+    the window at attention time; the engine frees pages behind the window
+    when every layer is local (serving/engine/scheduler.py::trim_window).
+
+    ``kv_bits`` (see normalize_kv_bits) selects the HAQ KV-quantized layout
+    per sub-layer slot: 16 keeps the bf16 arrays; 8/4 store
+    ``{"q": int8 (n_groups, num_pages, page_size, K, hd_store),
+       "scale": fp32 (n_groups, num_pages, page_size, K)}``
+    with hd_store = hd for int8 and hd//2 for int4 (two codes per byte
+    packed along head_dim). Scales are per page slot (token) and per kv
+    head — each physical page carries its own (page_size, K) scale tile, so
+    quantize-on-write never re-scales resident tokens (see
+    serving/kvquant)."""
     if cfg.family not in ("dense", "moe", "vlm"):
         raise NotImplementedError(
             f"paged KV pool supports attention-cache families only, "
@@ -484,11 +537,22 @@ def pool_specs(cfg, num_pages: int, page_size: int):
     K = cfg.num_kv_heads
     P = period_of(cfg)
     n_groups = cfg.num_layers // P
-    shape = (n_groups, num_pages, page_size, K, hd)
-    return {f"sub{j}": {
-        "k": jax.ShapeDtypeStruct(shape, jnp.bfloat16),
-        "v": jax.ShapeDtypeStruct(shape, jnp.bfloat16),
-    } for j in range(P)}
+    bits = normalize_kv_bits(cfg, kv_bits) or (16,) * P
+
+    def kv_spec(b):
+        if b == 16:
+            return jax.ShapeDtypeStruct(
+                (n_groups, num_pages, page_size, K, hd), jnp.bfloat16)
+        hd_store = hd if b == 8 else hd // 2
+        return {
+            "q": jax.ShapeDtypeStruct(
+                (n_groups, num_pages, page_size, K, hd_store), jnp.int8),
+            "scale": jax.ShapeDtypeStruct(
+                (n_groups, num_pages, page_size, K), jnp.float32),
+        }
+
+    return {f"sub{j}": {"k": kv_spec(bits[j]), "v": kv_spec(bits[j])}
+            for j in range(P)}
 
 
 # ------------------------------------------------------------ cache specs ----

@@ -53,10 +53,27 @@ growth, and preemption — are token-identical to it (asserted in
 tests/test_engine.py; the walk itself is validated against the dense
 oracle in tests/test_kernels.py).
 
+KV-cache quantization (serving/kvquant): ``AdmissionPolicy.kv_bits``
+selects a HAQ-searched per-sub-layer bit policy for the pool itself —
+pages stored int8/int4 (packed along head_dim) with per-page-slot per-head
+fp32 scale tiles, quantize-on-write in both writers, and dequantization
+fused into the paged-attention block walk. ``kv_bytes_per_token`` and page
+sizing are bit-policy-aware, so the same HBM budget holds 2-4x the pages
+and admission fits correspondingly more resident sequences; the fp pool
+remains the token-exact baseline (quantized drift is bounded and measured,
+see kvquant.drift).
+
+On models whose every attention layer is local (sliding-window), pages
+wholly behind the window are released back to the allocator as decode
+advances (``Scheduler.trim_window``; freed slots ride along in the page
+table as scratch-page placeholders the walk never reads).
+
 Modules: `pool` (page allocator + device pool + bounded jit caches),
-`scheduler` (FIFO admission / growth / preemption / eviction bookkeeping),
-`admission` (roofline-derived policy, expected-footprint batch sizing),
-`engine` (the host loop tying them to the model).
+`scheduler` (FIFO admission / growth / preemption / eviction / window-trim
+bookkeeping), `admission` (roofline-derived policy, expected-footprint
+batch sizing, KV-bit-aware page sizing), `engine` (the host loop tying
+them to the model); the KV quantization subsystem itself lives in
+`serving/kvquant`.
 """
 from repro.serving.engine.admission import AdmissionPolicy, derive_policy
 from repro.serving.engine.engine import Engine

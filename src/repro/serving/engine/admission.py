@@ -14,6 +14,11 @@ must not answer by guessing:
   * ``quant_bits``  — 16 (bf16) unless weights + one sequence of KV exceed
                       the HBM budget, in which case the HAQ default bit
                       policy (serving/quant.py) is applied: 8, then 4
+  * ``kv_bits``     — stored KV-cache bits for the page pool
+                      (serving/kvquant): every sizing quantity above is
+                      priced at the quantized width, so an int8 pool holds
+                      ~2x the pages and admits ~2x the resident sequences
+                      in the same HBM
 
 All quantities come from `core/hardware_model.py` OpCosts — the same
 roofline that drives NAS/AMC/HAQ at search time, now queried at serve time.
@@ -21,7 +26,7 @@ roofline that drives NAS/AMC/HAQ at search time, now queried at serve time.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Optional, Tuple
 
 from repro.core import hardware_model as hwm
 
@@ -38,15 +43,40 @@ class AdmissionPolicy:
     decode_slo_s: float
     est_decode_s: float     # roofline decode-step latency at max_batch
     est_prefill_s: float    # roofline prefill latency at prefill_chunk
+    # stored KV-cache bits per sub-layer slot (serving/kvquant); None = bf16
+    # pool. Cycled over layers like attn_pattern.
+    kv_bits: Optional[Tuple[int, ...]] = None
 
     @property
     def pages_per_seq(self) -> int:
         return -(-self.max_model_len // self.page_size)
 
 
-def kv_bytes_per_token(cfg) -> int:
-    """bf16 k+v bytes per cached token, across all layers."""
-    return cfg.num_layers * 2 * cfg.num_kv_heads * cfg.resolved_head_dim * 2
+def _kv_bits_for_layer(kv_bits, i: int) -> int:
+    if kv_bits is None:
+        return 16
+    if isinstance(kv_bits, int):
+        return kv_bits
+    return kv_bits[i % len(kv_bits)]
+
+
+def kv_bytes_per_token(cfg, kv_bits=None) -> int:
+    """k+v bytes per cached token across all layers, at the pool's stored
+    precision: bf16 by default; with a KV bit policy (int or per-sub-layer
+    tuple, cycled like ``attn_pattern``) quantized slots store
+    ``bits``-wide codes plus an fp32 scale per token per kv head for k and
+    v each (serving/kvquant page layout). This is what sizes pages — so the
+    whole admission roofline (pool capacity, expected-footprint batch,
+    page bytes) is bit-policy-aware."""
+    K, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    total = 0
+    for i in range(cfg.num_layers):
+        b = _kv_bits_for_layer(kv_bits, i)
+        per = 2 * K * (hd * b // 8)
+        if b < 16:
+            per += 2 * K * 4                 # fp32 scale tiles
+        total += per
+    return total
 
 
 def _ffn_latency(cfg, i: int, tokens: int, hw, tp: int, w_bits) -> float:
@@ -60,8 +90,13 @@ def _ffn_latency(cfg, i: int, tokens: int, hw, tp: int, w_bits) -> float:
 
 
 def step_latency(cfg, batch: int, q_len: int, ctx: int, hw: hwm.Hardware,
-                 *, w_bits: int = 16) -> float:
-    """Roofline latency of one forward step (q_len=1 -> decode tick)."""
+                 *, w_bits: int = 16, kv_bits=None) -> float:
+    """Roofline latency of one forward step (q_len=1 -> decode tick).
+
+    ``kv_bits`` (int or per-sub-layer tuple) prices the KV-cache reads at
+    the pool's stored precision — the direct hardware feedback the kvquant
+    HAQ search optimizes against. It applies to decode only: prefill
+    attends its own fp activations before the pool write quantizes them."""
     d, hd = cfg.d_model, cfg.resolved_head_dim
     H, K = cfg.num_heads, cfg.num_kv_heads
     tp = min(hw.chips, 16)
@@ -73,9 +108,10 @@ def step_latency(cfg, batch: int, q_len: int, ctx: int, hw: hwm.Hardware,
         window = cfg.window_size if kind == "local" else 0
         t += float(hwm.linear_cost(tokens, d, (H + 2 * K) * hd, tp=tp)
                    .latency(hw, w_bits=w_bits))
-        t += float(hwm.attention_cost(batch, q_len, ctx, H, K, hd,
-                                      window=window, decode=decode)
-                   .latency(hw))
+        t += float(hwm.attention_cost(
+            batch, q_len, ctx, H, K, hd, window=window, decode=decode,
+            kv_bits=_kv_bits_for_layer(kv_bits, i) if decode else 16)
+            .latency(hw))
         t += float(hwm.linear_cost(tokens, H * hd, d, tp=tp)
                    .latency(hw, w_bits=w_bits))
         t += _ffn_latency(cfg, i, tokens, hw, tp, w_bits)
@@ -90,7 +126,8 @@ def derive_policy(cfg, hw: hwm.Hardware, *, max_model_len: int,
                   hbm_util: float = 0.9,
                   max_batch_cap: int = 1024,
                   expected_occupancy: float = 0.5,
-                  param_bytes: Optional[int] = None) -> AdmissionPolicy:
+                  param_bytes: Optional[int] = None,
+                  kv_bits=None) -> AdmissionPolicy:
     """Pick (num_pages, max_batch, prefill_chunk, quant_bits) for a target.
 
     ``param_bytes`` defaults to the analytic bf16 weight footprint
@@ -103,6 +140,12 @@ def derive_policy(cfg, hw: hwm.Hardware, *, max_model_len: int,
     on exhaustion, so admission no longer has to reserve for every
     sequence simultaneously hitting max length. 1.0 restores the
     worst-case sizing that matches ``reserve_upfront`` scheduling.
+
+    ``kv_bits`` (already normalized: None, int, or per-sub-layer tuple —
+    see models/transformer.py::normalize_kv_bits and serving/kvquant)
+    shrinks per-token KV bytes, so the same HBM budget holds 2-4x the
+    pages and the expected-footprint batch grows with it; the decode-SLO
+    search prices KV reads at the quantized width.
     """
     if not 0.0 < expected_occupancy <= 1.0:
         raise ValueError(f"expected_occupancy must be in (0, 1], "
@@ -114,7 +157,7 @@ def derive_policy(cfg, hw: hwm.Hardware, *, max_model_len: int,
     if param_bytes is None:
         param_bytes = cfg.param_count() * 2
     hbm_total = hw.hbm_bytes * hw.chips * hbm_util
-    per_tok = kv_bytes_per_token(cfg)
+    per_tok = kv_bytes_per_token(cfg, kv_bits)
     one_seq_kv = per_tok * max_model_len
 
     # HAQ escalation: shrink weights until weights + one sequence fit.
@@ -145,20 +188,21 @@ def derive_policy(cfg, hw: hwm.Hardware, *, max_model_len: int,
 
     # Decode-latency roofline: largest batch meeting the SLO (monotonic).
     lo, hi = 1, max(min(mem_batch, max_batch_cap), 1)
-    if step_latency(cfg, hi, 1, max_model_len, hw,
-                    w_bits=quant_bits) <= decode_slo_s:
+    if step_latency(cfg, hi, 1, max_model_len, hw, w_bits=quant_bits,
+                    kv_bits=kv_bits) <= decode_slo_s:
         max_batch = hi
     else:
         while hi - lo > 1:
             mid = (lo + hi) // 2
             if step_latency(cfg, mid, 1, max_model_len, hw,
-                            w_bits=quant_bits) <= decode_slo_s:
+                            w_bits=quant_bits,
+                            kv_bits=kv_bits) <= decode_slo_s:
                 lo = mid
             else:
                 hi = mid
         max_batch = lo
     est_decode = step_latency(cfg, max_batch, 1, max_model_len, hw,
-                              w_bits=quant_bits)
+                              w_bits=quant_bits, kv_bits=kv_bits)
 
     # Prefill bucket: largest power-of-two chunk whose prefill keeps the
     # decode stall within prefill_stall_factor SLOs.
@@ -172,8 +216,11 @@ def derive_policy(cfg, hw: hwm.Hardware, *, max_model_len: int,
         chunk = c
     est_prefill = step_latency(cfg, 1, chunk, chunk, hw, w_bits=quant_bits)
 
+    if kv_bits is not None and isinstance(kv_bits, int):
+        kv_bits = (kv_bits,)
     return AdmissionPolicy(
         hw_name=hw.name, max_model_len=max_model_len, page_size=page_size,
         num_pages=num_pages, max_batch=max_batch, prefill_chunk=chunk,
         quant_bits=quant_bits, decode_slo_s=decode_slo_s,
-        est_decode_s=est_decode, est_prefill_s=est_prefill)
+        est_decode_s=est_decode, est_prefill_s=est_prefill,
+        kv_bits=kv_bits)

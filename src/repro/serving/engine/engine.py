@@ -24,7 +24,12 @@ per padding bucket and held in small LRU caches so long-running engines
 with many bucket shapes don't grow retrace caches without limit. When the
 policy's memory roofline demanded it, weights are HAQ-quantized
 (serving/quant.py) and the dequantizing ``dot`` is threaded through both
-paths.
+paths. ``policy.kv_bits`` additionally selects the HAQ KV-quantized pool
+(serving/kvquant): pages stored int8/int4 with per-token per-head scales,
+quantize-on-write in both writers, fused dequant inside the paged-
+attention walk — the fp pool stays the exactness baseline. On all-local-
+attention models, pages wholly behind the sliding window are released back
+to the allocator each tick (scheduler.trim_window).
 """
 from __future__ import annotations
 
@@ -35,6 +40,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.models.transformer import normalize_kv_bits, sublayer_kinds
 from repro.serving.engine.admission import AdmissionPolicy
 from repro.serving.engine.pool import JitLRU, PagedKVPool, quiet_donation
 from repro.serving.engine.scheduler import ActiveSeq, Request, Scheduler
@@ -83,10 +89,21 @@ class Engine:
         needed = policy.max_batch * policy.pages_per_seq + 1
         num_pages = max(min(policy.num_pages, needed),
                         policy.pages_per_seq + 1)
-        self.kv = PagedKVPool(model, num_pages, policy.page_size)
+        self.kv_bits = normalize_kv_bits(cfg, policy.kv_bits)
+        self.kv = PagedKVPool(model, num_pages, policy.page_size,
+                              kv_bits=self.kv_bits)
         self.scheduler = Scheduler(self.kv.allocator, policy.max_batch,
                                    policy.max_model_len,
                                    reserve_upfront=reserve_upfront)
+        # Window-trim page freeing (ROADMAP): pages are shared across
+        # layers, so blocks behind the sliding window can only be released
+        # when EVERY layer is local — one global layer pins the history.
+        # Off under reserve_upfront (the legacy worst-case baseline keeps
+        # its reservations untouched).
+        kinds = sublayer_kinds(cfg)
+        self._trim_window = cfg.window_size if (
+            not reserve_upfront and kinds
+            and all(k["attn"] == "local" for k in kinds)) else None
 
         # jit once: fixed (max_batch, pages_per_seq) shapes for decode;
         # prefill compiles per padding bucket (LRU below). The pool is
@@ -115,7 +132,7 @@ class Engine:
         self._make_prefill = lambda: jax.jit(prefill_fn)
         self.stats = {"decode_ticks": 0, "decode_tokens": 0,
                       "prefills": 0, "admitted": 0, "preemptions": 0,
-                      "grown_pages": 0}
+                      "grown_pages": 0, "trimmed_pages": 0}
         self._outputs: Dict[int, np.ndarray] = {}
 
     # ------------------------------------------------------------- intake --
@@ -190,6 +207,12 @@ class Engine:
         for seq in live:
             if not self._is_live(seq):
                 continue                    # preempted earlier this tick
+            if self._trim_window:
+                # release blocks wholly behind the sliding window before
+                # asking for growth — trimmed pages backfill the pool the
+                # same tick they die, shrinking the preemption pressure.
+                self.stats["trimmed_pages"] += self.scheduler.trim_window(
+                    seq, self._trim_window)
             before = len(seq.pages)
             while not self.scheduler.ensure_capacity(seq):
                 victim = self.scheduler.youngest_active()

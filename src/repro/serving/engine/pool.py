@@ -107,14 +107,22 @@ class JitLRU:
 
 
 class PagedKVPool:
-    """Device pool arrays + the allocator that tracks their occupancy."""
+    """Device pool arrays + the allocator that tracks their occupancy.
+
+    ``kv_bits`` (already normalized — see transformer.normalize_kv_bits)
+    selects the HAQ KV-quantized pool layout per sub-layer slot
+    (serving/kvquant): quantized slots store int8/int4 codes plus
+    per-page-slot per-head fp32 scale tiles, and the prefill writer
+    quantizes on write with the same mapping the decode scatter uses."""
 
     WRITE_JIT_CAP = 8   # LRU cap on per-(n_pages, cache_len) writer jits
 
-    def __init__(self, model, num_pages: int, page_size: int):
+    def __init__(self, model, num_pages: int, page_size: int, *,
+                 kv_bits=None):
         self.allocator = PageAllocator(num_pages, page_size)
         self.page_size = page_size
-        self.pool = model.init_pool(num_pages, page_size)
+        self.kv_bits = kv_bits
+        self.pool = model.init_pool(num_pages, page_size, kv_bits=kv_bits)
         self._write_jit = JitLRU(self.WRITE_JIT_CAP)
 
     @property
@@ -129,7 +137,13 @@ class PagedKVPool:
         an open-ended mix of bucket/page-count shapes can't grow the retrace
         cache without bound. Bucket-padding garbage beyond the true prompt
         lands only inside the request's own pages and is masked (j <= pos)
-        or overwritten by decode."""
+        or overwritten by decode.
+
+        Quantized slots quantize on write: the bf16 prefill pages become
+        int8/int4 codes + scale tiles in the same fused scatter (garbage
+        slots quantize too, harmlessly — they stay behind the mask)."""
+        from repro.kernels import ref as kref
+
         n = len(pages)
         page = self.page_size
         Sp = jax.tree.leaves(cache)[0].shape[2]
@@ -145,8 +159,16 @@ class PagedKVPool:
                         c = jnp.pad(c, ((0, 0), (0, span - Sp))
                                     + ((0, 0),) * (c.ndim - 2))
                     c = c.reshape(c.shape[0], n, page, *c.shape[2:])
+                    if isinstance(pool_leaf, dict):     # quantized slot
+                        bits = kref.kv_bits_of(pool_leaf["q"], c.shape[-1])
+                        q, scale = kref.quantize_kv(c, bits)
+                        return {"q": pool_leaf["q"].at[:, idx].set(q),
+                                "scale": pool_leaf["scale"]
+                                .at[:, idx].set(scale)}
                     return pool_leaf.at[:, idx].set(c)
-                return jax.tree.map(wr, pool, cache)
+                return jax.tree.map(
+                    wr, pool, cache,
+                    is_leaf=lambda x: isinstance(x, dict) and "q" in x)
             return jax.jit(write, donate_argnums=(0,))
 
         fn = self._write_jit.get((n, Sp), make)

@@ -130,6 +130,27 @@ class Scheduler:
             seq.pages.extend(got)
         return True
 
+    def trim_window(self, seq: ActiveSeq, window: int) -> int:
+        """Free the pages of logical blocks wholly behind ``seq``'s sliding
+        window (every slot at kpos <= seq.pos - window, dead for the query
+        at seq.pos and every later one) — the ROADMAP's "trim the pages
+        themselves" item. Only valid when EVERY attention layer is local
+        (pages are shared across layers; one global layer pins the full
+        history — the engine checks this once at construction).
+
+        Freed slots stay in ``seq.pages`` as logical-block placeholders
+        (page 0, the scratch sentinel the page-table tails already use):
+        the walk's per-sequence lower bound ``(pos - window + 1) // page``
+        never reads them, and release/preempt skip them. Returns the number
+        of pages released."""
+        page = self.allocator.page_size
+        lo = max((seq.pos - window + 1) // page, 0)
+        dead = [p for p in seq.pages[:lo] if p != 0]
+        if dead:
+            self.allocator.free(dead)
+            seq.pages[:lo] = [0] * lo
+        return len(dead)
+
     def youngest_active(self) -> Optional[ActiveSeq]:
         """The preemption victim candidate: the most recently admitted
         active sequence. Pages always flow from younger to older — a
@@ -149,7 +170,7 @@ class Scheduler:
         decode re-draws its RNG keys from the new generation offsets after
         a preemption.)"""
         del self.active[seq.slot]
-        self.allocator.free(seq.pages)
+        self.allocator.free([p for p in seq.pages if p != 0])
         self._free_slots.append(seq.slot)
         assert seq.req.max_new > len(seq.generated), \
             "done sequences are evicted, not preempted"
@@ -163,9 +184,10 @@ class Scheduler:
 
     def release(self, seq: ActiveSeq) -> None:
         """Evict a finished sequence: free its pages and batch slot so the
-        next admit() can backfill mid-flight."""
+        next admit() can backfill mid-flight (window-trimmed blocks are
+        already free and ride along as page-0 placeholders)."""
         del self.active[seq.slot]
-        self.allocator.free(seq.pages)
+        self.allocator.free([p for p in seq.pages if p != 0])
         self._free_slots.append(seq.slot)
 
     # -------------------------------------------------------------- state --
