@@ -6,7 +6,7 @@ Results are also written to ``BENCH_engine.json`` (see ``--out``) so the
 perf trajectory stays machine-readable across PRs; every trace RNG is
 seeded explicitly (TRACE_SEEDS).
 
-Three traces on the tiny CPU config:
+Four traces on the tiny CPU config:
 
   * **mixed** (16 requests, Poisson arrivals, Poisson-ish length mix):
     served sequentially through `launch.serve.generate` (B=1, one request
@@ -36,13 +36,26 @@ Three traces on the tiny CPU config:
     report teacher-forced max-abs logit drift (kvquant.greedy_drift) and
     the greedy token-match fraction against fp.
 
+  * **longprompt** (a few short residents decoding for the whole run while
+    long prompts keep a prefill in flight): served twice through the
+    engine — whole-prompt buckets vs chunked prefill at a fixed chunk.
+    Reports decode tok/s, per-decode-tick stall p50/p99 (the seconds a
+    tick's already-ready sequences waited on prefill work,
+    ``Engine.stall_log``), and TTFT p50/p99. Greedy outputs are asserted
+    identical; the chunked mode must cut stall p99 >= 2x at equal decode
+    tok/s (±10%) — the acceptance bar the CI bench-gate re-checks from
+    the JSON.
+
 Engines are warmed on the exact trace shapes and re-timed on the same
 instance, so jit compiles are excluded. Outputs are asserted identical
 between the two admission modes (and to the sequential baseline on the
 mixed trace).
 
-Run: ``PYTHONPATH=src python -m benchmarks.bench_engine_throughput``
-(CI smoke: ``--requests 4 --skewed-requests 4 --kv-requests 4``).
+Run: ``PYTHONPATH=src python -m benchmarks.bench_engine_throughput``.
+CI: the engine-smoke job reruns the default (baseline-size) traces and
+diffs the fresh JSON against the committed one via
+``scripts/check_bench_regression.py``; the kv-quant job smokes
+``--kv-requests 4`` separately.
 """
 from __future__ import annotations
 
@@ -73,9 +86,15 @@ ARRIVAL_RATE = 200.0   # req/s — a heavy-traffic burst
 SKEW_MAX_LEN = 128     # skewed trace: model len, 8 pages of 16 per seq
 SKEW_NUM_PAGES = 17    # 16 usable — two worst-case sequences' worth
 
+LONG_MAX_LEN = 1024    # long-prompt trace: model len
+LONG_PROMPT_LEN = 960  # the prompt whose prefill stalls resident decodes
+LONG_CHUNK = 64        # fixed chunk so the stall bound is reproducible
+LONG_RESIDENTS = 3     # short requests decoding for the whole run
+LONG_RESIDENT_GEN = 224
+
 # explicit trace seeds: the JSON trajectory is only comparable across PRs
 # if every trace is reproducible
-TRACE_SEEDS = {"mixed": 0, "skewed": 1, "kv": 2}
+TRACE_SEEDS = {"mixed": 0, "skewed": 1, "kv": 2, "long": 3}
 
 
 def make_trace(cfg, n, seed=0):
@@ -122,14 +141,17 @@ def run_sequential(model, params, reqs):
 
 
 def build_engine(model, params, *, max_model_len=96, reserve_upfront=False,
-                 num_pages=None, max_batch=MAX_BATCH):
+                 num_pages=None, max_batch=MAX_BATCH, prefill_chunk=None,
+                 chunked_prefill=True):
     policy = derive_policy(model.cfg, V5E_EDGE,
                            max_model_len=max_model_len,
                            param_bytes=model.param_bytes())
     policy = dataclasses.replace(
         policy, max_batch=max_batch,
-        **({"num_pages": num_pages} if num_pages else {}))
-    return Engine(model, params, policy, reserve_upfront=reserve_upfront)
+        **({"num_pages": num_pages} if num_pages else {}),
+        **({"prefill_chunk": prefill_chunk} if prefill_chunk else {}))
+    return Engine(model, params, policy, reserve_upfront=reserve_upfront,
+                  chunked_prefill=chunked_prefill)
 
 
 def timed_run(engine, reqs, *, realtime):
@@ -202,6 +224,86 @@ def bench_skewed(model, params, cfg, n):
             "lazy_decode_tok_s": results["lazy"][1], "gain": gain}
 
 
+def make_long_trace(cfg, n, seed=3):
+    """A few short prompts that decode for the whole run (the decode-SLO
+    population) plus ``n`` long-prompt short-generation requests that keep
+    a prefill in flight almost continuously. Under whole-prompt prefill
+    every long admission stalls the residents for the full prompt's
+    forward; chunked prefill bounds the per-tick stall at one chunk."""
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i in range(LONG_RESIDENTS):
+        prompt = rng.integers(2, cfg.vocab_size, 8).astype(np.int32)
+        reqs.append(Request(rid=i, prompt=prompt, max_new=LONG_RESIDENT_GEN))
+    for i in range(n):
+        prompt = rng.integers(2, cfg.vocab_size,
+                              LONG_PROMPT_LEN).astype(np.int32)
+        reqs.append(Request(rid=LONG_RESIDENTS + i, prompt=prompt,
+                            max_new=16))
+    return reqs
+
+
+def _pct(xs, q):
+    return float(np.percentile(np.asarray(xs, np.float64), q)) if xs else 0.0
+
+
+def bench_longprompt(model, params, cfg, n):
+    """Whole-prompt vs chunked prefill on the long-prompt trace: decode
+    tok/s, per-decode-tick stall p50/p99 (engine.stall_log), and TTFT.
+
+    Both modes run the same prefill-with-cache forward; "whole" sets the
+    chunk to the model length, so every prompt lands in ONE tick — exactly
+    the pre-chunking stall behaviour — while keeping the code path (and
+    therefore the greedy outputs, asserted token-identical) shared, so the
+    comparison isolates *chunking* rather than kernel numerics. The legacy
+    bucketed forward (``chunked_prefill=False``) stays covered for
+    exactness in tests/test_engine.py and test_chunked_prefill.py."""
+    reqs = make_long_trace(cfg, n, seed=TRACE_SEEDS["long"])
+    out = {"n": n, "prompt_len": LONG_PROMPT_LEN, "chunk": LONG_CHUNK}
+    results = {}
+    for mode, chunk in (("whole", LONG_MAX_LEN), ("chunked", LONG_CHUNK)):
+        engine = build_engine(model, params, max_model_len=LONG_MAX_LEN,
+                              max_batch=LONG_RESIDENTS + 1,
+                              prefill_chunk=chunk)
+        outs, dt, stats = timed_run(engine, reqs, realtime=False)
+        stall_ms = [s * 1e3 for s in engine.stall_log]
+        ttft_ms = [t * 1e3 for t in engine.first_token_s.values()]
+        tps = stats["decode_tokens"] / dt
+        rec = {"decode_tok_s": tps,
+               "decode_ticks": stats["decode_ticks"],
+               "prefill_chunks": stats["prefill_chunks"],
+               "stall_p50_ms": _pct(stall_ms, 50),
+               "stall_p99_ms": _pct(stall_ms, 99),
+               "stall_max_ms": max(stall_ms) if stall_ms else 0.0,
+               "ttft_p50_ms": _pct(ttft_ms, 50),
+               "ttft_p99_ms": _pct(ttft_ms, 99)}
+        results[mode] = outs
+        out[mode] = rec
+        row(f"engine/longprompt-{mode}",
+            dt / max(stats["decode_tokens"], 1) * 1e6,
+            f"decode_tok_s={tps:.1f};stall_p99_ms={rec['stall_p99_ms']:.1f};"
+            f"ttft_p50_ms={rec['ttft_p50_ms']:.0f};"
+            f"chunks={stats['prefill_chunks']}")
+    for r in reqs:
+        assert np.array_equal(results["whole"][r.rid],
+                              results["chunked"][r.rid]), (
+            f"chunked prefill diverged from whole-prompt prefill for "
+            f"request {r.rid}")
+    red = out["whole"]["stall_p99_ms"] / max(out["chunked"]["stall_p99_ms"],
+                                             1e-9)
+    ratio = out["chunked"]["decode_tok_s"] / out["whole"]["decode_tok_s"]
+    out["stall_p99_reduction"] = red
+    out["decode_tok_s_ratio"] = ratio
+    row("engine/longprompt-stall-reduction", red,
+        f"reduction={red:.2f}x;tok_s_ratio={ratio:.2f};"
+        f"target>=2x@ratio+-10%;pass={red >= 2.0 and 0.9 <= ratio}")
+    print(f"# chunked prefill: decode-stall p99 "
+          f"{out['chunked']['stall_p99_ms']:.1f}ms vs whole-prompt "
+          f"{out['whole']['stall_p99_ms']:.1f}ms ({red:.2f}x lower) at "
+          f"{ratio:.2f}x decode tok/s (outputs identical)", flush=True)
+    return out
+
+
 def _equal_budget_pages(cfg, kv_bits, page_size=16):
     """Pages a fixed KV byte budget holds at a given bit policy — the fp
     pool's SKEW_NUM_PAGES worth of bytes, re-sliced at quantized width."""
@@ -215,7 +317,7 @@ def bench_kv(model, params, cfg, n):
     haq = search_kv_policy(cfg, V5E_EDGE, max_model_len=SKEW_MAX_LEN,
                            episodes=0, budget_frac=0.4)
     modes = {"fp16": None, "int8": 8, "haq": haq["bits"]}
-    out = {"haq_policy": haq["policy"]}
+    out = {"haq_policy": haq["policy"], "n": n}
     fp_outs = None
     fp_replay = None     # one fp teacher-forced replay shared by all modes
     for name, bits in modes.items():
@@ -275,6 +377,9 @@ def main():
                     help="skewed-trace size (0 skips the section)")
     ap.add_argument("--kv-requests", type=int, default=12,
                     help="kv-quant trace size (0 skips the section)")
+    ap.add_argument("--long-requests", type=int, default=6,
+                    help="long-prompt trace: number of long prompts "
+                         "(0 skips the section)")
     ap.add_argument("--out", default="BENCH_engine.json",
                     help="machine-readable results file ('' disables)")
     # parse_known_args: benchmarks/run.py invokes main() with its own tag
@@ -289,6 +394,9 @@ def main():
         "config": {"arch": ARCH, "tiny": True, "max_batch": MAX_BATCH,
                    "page_size": 16, "skew_max_len": SKEW_MAX_LEN,
                    "skew_num_pages": SKEW_NUM_PAGES,
+                   "long_max_len": LONG_MAX_LEN,
+                   "long_prompt_len": LONG_PROMPT_LEN,
+                   "long_chunk": LONG_CHUNK,
                    "trace_seeds": TRACE_SEEDS},
     }
     if args.requests:
@@ -298,6 +406,9 @@ def main():
                                          args.skewed_requests)
     if args.kv_requests:
         results["kv"] = bench_kv(model, params, cfg, args.kv_requests)
+    if args.long_requests:
+        results["longprompt"] = bench_longprompt(model, params, cfg,
+                                                 args.long_requests)
     if args.out:
         with open(args.out, "w") as f:
             json.dump(results, f, indent=2, sort_keys=True)

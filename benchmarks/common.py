@@ -8,7 +8,7 @@ table-specific metric (loss delta, simulated latency, speedup, ...).
 from __future__ import annotations
 
 import time
-from typing import Callable, Dict, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -16,7 +16,7 @@ import jax.numpy as jnp
 from repro.configs import tiny_config
 from repro.configs.base import OptimConfig, TrainConfig
 from repro.core import quantization as q
-from repro.data.pipeline import DataConfig, batch_at
+from repro.data.pipeline import DataConfig
 from repro.models.api import build_model
 from repro.training import steps as steps_lib
 

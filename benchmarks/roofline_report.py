@@ -9,7 +9,7 @@ from pathlib import Path
 from benchmarks.common import row
 from repro.configs import get_config
 from repro.core import haq
-from repro.core.hardware_model import V5E_EDGE, V5E_POD
+from repro.core.hardware_model import V5E_EDGE
 
 ART = Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
 

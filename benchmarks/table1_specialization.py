@@ -10,7 +10,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import row, time_call
+from benchmarks.common import row
 from repro.configs.supernet_lm import BACKBONE, CANDIDATE_OPS
 from repro.core import latency_table as lt
 from repro.core import nas
@@ -75,7 +75,6 @@ def main():
     for name, arch in candidates.items():
         ce = eval_arch(arch, cfg, data)
         lat = arch_latency(arch, lut)
-        us = time_call(jax.jit(lambda t: t + 1), jnp.zeros(()))
         row(f"table1/{name}", lat, f"val_ce={ce:.3f}")
     row("table1/nas-arch", res["e_lat_us"],
         "arch=" + "|".join(res["arch"]))

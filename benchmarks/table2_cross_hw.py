@@ -10,7 +10,6 @@ Targets (TPU serving regimes, DESIGN.md §2):
 from __future__ import annotations
 
 import jax.numpy as jnp
-import numpy as np
 
 from benchmarks.common import row
 from benchmarks.table1_specialization import tiny_backbone, arch_latency

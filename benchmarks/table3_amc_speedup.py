@@ -4,7 +4,6 @@ quality before/after (the paper's MobileNet 1.81x/1.95x rows)."""
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 from benchmarks.common import row, time_call, trained_tiny_model
 from repro.core import amc

@@ -15,7 +15,6 @@ diagonal must be feasible; off-diagonal cells generally are not.
 """
 from __future__ import annotations
 
-import jax
 
 from benchmarks.common import (make_traced_policy_loss, row,
                                trained_tiny_model)

@@ -3,7 +3,6 @@ at the latency of uniform k-bit PACT, HAQ's mixed policy should lose less
 quality (paper: +2-5 points top-1 at matched latency)."""
 from __future__ import annotations
 
-import jax
 
 from benchmarks.common import (make_traced_policy_loss, row,
                                trained_tiny_model)

@@ -2,7 +2,6 @@
 further training) to arch B, vs direct search on B and fixed PACT."""
 from __future__ import annotations
 
-import jax
 
 from benchmarks.common import (make_traced_policy_loss, row,
                                trained_tiny_model)

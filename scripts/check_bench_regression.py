@@ -1,0 +1,190 @@
+"""CI bench-regression gate for BENCH_engine.json.
+
+Diffs a freshly produced bench result against the committed baseline and
+fails (exit 1) when any decode-throughput metric drops more than the
+tolerance (default 15%). The comparison table is always printed, one row
+per ``*tok_s`` leaf, so a red gate shows exactly which trace regressed and
+a green gate still documents the trajectory.
+
+Sections are only compared when both files ran the same trace size (their
+``n`` keys match) — a CI smoke at 4 requests is not comparable to a
+12-request baseline and is reported as SKIP rather than silently passed.
+
+The long-prompt section additionally carries its own acceptance
+invariants, checked from the fresh file alone (they are ratios of two
+same-machine runs, so they transfer across runner classes):
+
+* ``stall_p99_reduction >= 2.0`` — chunked prefill must cut the
+  per-decode-tick stall p99 at least 2x vs whole-prompt prefill;
+* ``decode_tok_s_ratio >= 0.9`` — at no more than a 10% decode
+  throughput cost.
+
+Absolute tok/s values are machine-dependent: regenerate the committed
+baseline (``python -m benchmarks.bench_engine_throughput``) when the CI
+runner class changes, or tune ``--tolerance`` via the BENCH_GATE_TOL env
+var.
+
+Usage::
+
+    python scripts/check_bench_regression.py \
+        --baseline BENCH_engine.json --fresh BENCH_fresh.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+STALL_REDUCTION_MIN = 2.0
+TOK_S_RATIO_MIN = 0.9
+
+
+def tok_s_leaves(node, path=()):
+    """Yield (dotted_path, value) for every numeric ``*tok_s`` leaf."""
+    if isinstance(node, dict):
+        for key in sorted(node):
+            yield from tok_s_leaves(node[key], path + (str(key),))
+    elif isinstance(node, (int, float)) and path:
+        if path[-1].endswith("tok_s"):
+            yield ".".join(path), float(node)
+
+
+def section_of(path):
+    return path.split(".", 1)[0]
+
+
+def sizes_match(baseline, fresh, section):
+    b, f = baseline.get(section), fresh.get(section)
+    if not isinstance(b, dict) or not isinstance(f, dict):
+        return False
+    # a section without a recorded trace size is never comparable
+    return b.get("n") is not None and b.get("n") == f.get("n")
+
+
+def compare(baseline, fresh, tolerance):
+    """Build comparison rows; returns (rows, failures)."""
+    rows = []
+    failures = []
+    base_vals = dict(tok_s_leaves(baseline))
+    fresh_vals = dict(tok_s_leaves(fresh))
+    for path, base in sorted(base_vals.items()):
+        section = section_of(path)
+        got = fresh_vals.get(path)
+        if got is None:
+            rows.append((path, base, None, None, "SKIP (missing in fresh)"))
+            continue
+        if not sizes_match(baseline, fresh, section):
+            rows.append((path, base, got, None, "SKIP (trace size differs)"))
+            continue
+        delta = (got - base) / base if base else 0.0
+        if delta < -tolerance:
+            status = f"FAIL (> {tolerance:.0%} drop)"
+            failures.append(f"{path}: {base:.1f} -> {got:.1f} ({delta:+.1%})")
+        else:
+            status = "OK"
+        rows.append((path, base, got, delta, status))
+    for path in sorted(set(fresh_vals) - set(base_vals)):
+        rows.append((path, None, fresh_vals[path], None, "NEW (no baseline)"))
+    return rows, failures
+
+
+def check_longprompt(fresh):
+    """Acceptance invariants of the chunked-prefill section (fresh-only)."""
+    rows = []
+    failures = []
+    section = fresh.get("longprompt")
+    if not isinstance(section, dict):
+        return rows, failures
+    checks = [
+        ("longprompt.stall_p99_reduction", STALL_REDUCTION_MIN),
+        ("longprompt.decode_tok_s_ratio", TOK_S_RATIO_MIN),
+    ]
+    for path, floor in checks:
+        value = section.get(path.split(".", 1)[1])
+        if value is None:
+            rows.append((path, floor, None, None, "SKIP (not recorded)"))
+            continue
+        if value >= floor:
+            rows.append((path, floor, value, None, "OK"))
+        else:
+            rows.append((path, floor, value, None, f"FAIL (< {floor})"))
+            failures.append(f"{path}: {value:.2f} below the {floor} floor")
+    return rows, failures
+
+
+def _fmt(value):
+    if value is None:
+        return "-"
+    if isinstance(value, str):
+        return value
+    return f"{value:.2f}"
+
+
+def print_table(rows, headers):
+    widths = [len(h) for h in headers]
+    rendered = []
+    for row in rows:
+        cells = [_fmt(value) for value in row]
+        rendered.append(cells)
+        widths = [max(w, len(c)) for w, c in zip(widths, cells)]
+    line = "  ".join(h.ljust(w) for h, w in zip(headers, widths))
+    print(line)
+    print("-" * len(line))
+    for cells in rendered:
+        print("  ".join(c.ljust(w) for c, w in zip(cells, widths)))
+
+
+def main():
+    parser = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    parser.add_argument("--baseline", default="BENCH_engine.json")
+    parser.add_argument("--fresh", required=True)
+    parser.add_argument(
+        "--tolerance",
+        type=float,
+        default=float(os.environ.get("BENCH_GATE_TOL", "0.15")),
+        help="max allowed fractional decode tok/s drop (default 0.15)",
+    )
+    args = parser.parse_args()
+
+    with open(args.baseline) as fh:
+        baseline = json.load(fh)
+    with open(args.fresh) as fh:
+        fresh = json.load(fh)
+
+    rows, failures = compare(baseline, fresh, args.tolerance)
+    table = [
+        (
+            path,
+            base,
+            got,
+            None if delta is None else f"{delta:+.1%}",
+            status,
+        )
+        for path, base, got, delta, status in rows
+    ]
+    print(f"bench gate: tolerance {args.tolerance:.0%} decode tok/s drop")
+    print_table(table, ("metric", "baseline", "fresh", "delta", "status"))
+
+    lp_rows, lp_failures = check_longprompt(fresh)
+    failures.extend(lp_failures)
+    if lp_rows:
+        print()
+        print("chunked-prefill acceptance (fresh run, machine-independent):")
+        print_table(
+            [(p, f, v, s) for p, f, v, _, s in lp_rows],
+            ("invariant", "floor", "value", "status"),
+        )
+
+    print()
+    if failures:
+        for failure in failures:
+            print(f"REGRESSION: {failure}")
+        return 1
+    print("bench gate: no regressions")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -3,7 +3,6 @@ import sys
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import ARCHS, tiny_config
 from repro.models.api import build_model

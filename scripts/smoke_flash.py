@@ -1,7 +1,6 @@
 """Dev smoke: flash_attention == dense reference, fwd + grads."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.models.attention import _attend, causal_mask, local_mask
 from repro.models.flash import flash_attention

@@ -62,7 +62,7 @@ def save(ckpt_dir: str, step: int, tree: Any, *, keep: int = 3) -> Path:
 
 def restore(ckpt_dir: str, like: Any, step: Optional[int] = None) -> tuple[Any, int]:
     """Restore into the structure of `like`. Returns (tree, step)."""
-    import ml_dtypes  # registers bfloat16 etc. with numpy
+    import ml_dtypes  # noqa: F401  (registers bfloat16 with numpy)
 
     step = latest_step(ckpt_dir) if step is None else step
     if step is None:

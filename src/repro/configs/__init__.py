@@ -4,6 +4,10 @@ from __future__ import annotations
 from repro.configs.base import (ModelConfig, MoEConfig, OptimConfig,
                                 ShapeConfig, SSMConfig, TrainConfig, SHAPES)
 
+__all__ = ["ModelConfig", "MoEConfig", "OptimConfig", "ShapeConfig",
+           "SSMConfig", "TrainConfig", "SHAPES", "ARCHS", "ALIASES",
+           "get_config", "get_shape", "assigned_cells", "tiny_config"]
+
 from repro.configs.granite_3_8b import CONFIG as _granite
 from repro.configs.mistral_large_123b import CONFIG as _mistral
 from repro.configs.nemotron_4_15b import CONFIG as _nemotron

@@ -18,13 +18,12 @@ from __future__ import annotations
 import dataclasses
 from typing import Callable, Dict, List, Optional, Tuple
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import pruning
 from repro.core.rl.ddpg import DDPG, DDPGConfig
-from repro.core.hardware_model import Hardware, V5E_POD, linear_cost
+from repro.core.hardware_model import Hardware, V5E_POD
 
 F32 = jnp.float32
 STATE_DIM = 11

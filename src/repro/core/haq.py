@@ -24,7 +24,6 @@ from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.core import quantization as q
 from repro.core.hardware_model import (Hardware, V5E_EDGE, OpCost,
                                        attention_cost, linear_cost)
 from repro.core.rl.ddpg import DDPG, DDPGConfig

@@ -14,7 +14,7 @@ gradient-descent search loss (Eq. 3).
 """
 from __future__ import annotations
 
-from typing import Dict, Sequence
+from typing import Sequence
 
 import jax
 import jax.numpy as jnp

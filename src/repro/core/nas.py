@@ -17,7 +17,6 @@ additive form — select with `latency_loss`:
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Callable, Dict, List, Optional
 
 import jax

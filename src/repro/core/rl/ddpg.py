@@ -8,7 +8,6 @@ a full search runs in seconds on CPU.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -14,7 +14,7 @@ hardware-cost gradient each step even though only one path computes.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, List, Tuple
+from typing import Any, Dict, List
 
 import jax
 import jax.numpy as jnp
@@ -23,8 +23,8 @@ from repro.configs.supernet_lm import BACKBONE, CANDIDATE_OPS
 from repro.models import attention as attn
 from repro.models import ssm as ssm_lib
 from repro.models.layers import ffn_apply, ffn_defs, norm_def, rms_norm
-from repro.models.params import PDef, init_params, logical_specs
-from repro.models.transformer import embed_tokens, unembed, chunked_ce
+from repro.models.params import PDef, init_params
+from repro.models.transformer import embed_tokens, chunked_ce
 
 F32 = jnp.float32
 
@@ -135,7 +135,6 @@ def derive_arch(alpha) -> List[str]:
 
 
 def child_param_count(arch: List[str], cfg=BACKBONE) -> int:
-    import numpy as np
     from repro.models.params import param_count
     total = param_count({"e": PDef((cfg.padded_vocab, cfg.d_model),
                                    ("vocab", "embed"))})

@@ -81,10 +81,6 @@ def choose_spec(shape: Tuple[int, ...], logical: Tuple[Optional[str], ...],
 
 def specs_for(abstract: Any, logical: Any, mesh: Mesh) -> Any:
     """Pytree of NamedShardings matching `abstract` (ShapeDtypeStructs)."""
-    is_axes = lambda x: x is None or (
-        isinstance(x, tuple) and all(a is None or isinstance(a, str)
-                                     for a in x))
-
     flat_a, tdef = jax.tree.flatten(abstract)
     flat_l = tdef.flatten_up_to(logical)
     out = []

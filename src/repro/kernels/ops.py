@@ -6,8 +6,7 @@ the weight-quantization caching used by the serving path.
 """
 from __future__ import annotations
 
-import functools
-from typing import Dict, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp
@@ -143,5 +142,43 @@ def paged_attention_quant(q, pool_k, k_scale, pool_v, v_scale, page_table,
     if mode != "pallas":
         raise ValueError(f"unknown paged-attention mode {mode!r}")
     return pa.paged_attention_quant_fwd(
+        q, pool_k, k_scale, pool_v, v_scale, page_table, positions,
+        window=window, cap=cap, interpret=_interpret())
+
+
+def paged_attention_prefill(q, pool_k, pool_v, page_table, positions, *,
+                            window=0, cap=0.0, mode: str = "auto"):
+    """Chunked-prefill attention: q (B, Sq, H, hd) — one prompt chunk per
+    sequence whose K/V are already resident in the pool — against the page
+    pool, causal at each query's absolute position (``positions`` holds the
+    chunk-start offsets). Same dispatch contract as paged_attention; both
+    paths walk pages and never materialize the dense prompt KV view."""
+    if mode == "auto":
+        mode = "ref" if _interpret() else "pallas"
+    if mode == "ref":
+        return ref.paged_prefill_ref(q, pool_k, pool_v, page_table,
+                                     positions, window=window, cap=cap)
+    if mode != "pallas":
+        raise ValueError(f"unknown paged-attention mode {mode!r}")
+    return pa.paged_prefill_fwd(q, pool_k, pool_v, page_table, positions,
+                                window=window, cap=cap,
+                                interpret=_interpret())
+
+
+def paged_attention_prefill_quant(q, pool_k, k_scale, pool_v, v_scale,
+                                  page_table, positions, *, window=0,
+                                  cap=0.0, mode: str = "auto"):
+    """Chunked-prefill attention over a quantized KV page pool (the chunk's
+    K/V are already quantized on write); dequantization happens block-by-
+    block inside the walk on every path."""
+    if mode == "auto":
+        mode = "ref" if _interpret() else "pallas"
+    if mode == "ref":
+        return ref.paged_prefill_quant_ref(
+            q, pool_k, k_scale, pool_v, v_scale, page_table, positions,
+            window=window, cap=cap)
+    if mode != "pallas":
+        raise ValueError(f"unknown paged-attention mode {mode!r}")
+    return pa.paged_prefill_quant_fwd(
         q, pool_k, k_scale, pool_v, v_scale, page_table, positions,
         window=window, cap=cap, interpret=_interpret())

@@ -52,14 +52,17 @@ LANES = 128  # scratch minor dim, aligned to the VPU lane width
 def _block_update(q, k, v, pos, i, *, page, window, cap,
                   m_ref, l_ref, acc_ref):
     """Masked online-softmax accumulation of one fp32 (page, hd) KV block —
-    the math both the fp and the fused-dequant kernels must agree on
-    exactly, kept in one place. q (G, hd) pre-scaled fp32."""
-    G = q.shape[0]
+    the math the fp/fused-dequant decode kernels AND their chunked-prefill
+    variants must agree on exactly, kept in one place. q (rows, hd)
+    pre-scaled fp32; ``pos`` is the query position — a scalar for decode
+    (every row is the same token's G query heads) or a (rows, 1) per-row
+    vector for chunked prefill (rows = Sq*G, causal within the chunk)."""
+    rows = q.shape[0]
     s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
-                            preferred_element_type=F32)        # (G, page)
+                            preferred_element_type=F32)        # (rows, page)
     if cap:
         s = cap * jnp.tanh(s / cap)
-    kpos = i * page + jax.lax.broadcasted_iota(jnp.int32, (G, page), 1)
+    kpos = i * page + jax.lax.broadcasted_iota(jnp.int32, (rows, page), 1)
     valid = kpos <= pos
     if window:
         valid &= kpos > pos - window
@@ -77,9 +80,12 @@ def _block_update(q, k, v, pos, i, *, page, window, cap,
         p, v, (((1,), (0,)), ((), ())), preferred_element_type=F32)
 
 
-def _block_range(pos, page, window):
-    """(lo, hi) inclusive block range a query at ``pos`` must walk."""
-    hi = pos // page                       # last block holding a live token
+def _block_range(pos, page, window, span=1):
+    """(lo, hi) inclusive block range the queries at ``pos .. pos+span-1``
+    must walk (span == 1 is the decode case; chunked prefill passes the
+    chunk length). ``lo`` is the first query's window start — later queries
+    only look higher, and the per-row mask handles the rest."""
+    hi = (pos + span - 1) // page          # last block holding a live token
     lo = jnp.maximum((pos - window + 1) // page, 0) if window else 0
     return lo, hi
 
@@ -95,13 +101,13 @@ def _finalize_out(o_ref, l_ref, acc_ref):
     o_ref[...] = out.reshape(o_ref.shape).astype(o_ref.dtype)
 
 
-def _kv_index_map(page, window):
+def _kv_index_map(page, window, span=1):
     """Shared BlockSpec index map for the page-table walk: clamp skipped
     blocks onto an in-range (already fetched) page so no fresh DMA is
     pipelined for them; pl.when skips their compute."""
     def kv_map(b, k, i, pt, pos):
         p = pos[b]
-        lo, hi = _block_range(p, page, window)
+        lo, hi = _block_range(p, page, window, span)
         ic = jnp.clip(i, lo, hi) if window else jnp.minimum(i, hi)
         return (pt[b, ic], 0, k, 0)
     return kv_map
@@ -273,3 +279,184 @@ def paged_attention_quant_fwd(q, pool_k, k_scale, pool_v, v_scale,
         interpret=interpret,
     )(page_table, positions, qr, pool_k, k_scale, pool_v, v_scale)
     return out.reshape(B, H, hd)
+
+
+# ------------------------------------------------ chunked-prefill variant ----
+def _prefill_qpos(pos, Sq, G):
+    """Per-row query positions for the (Sq*G, hd) flattened chunk: row
+    r = s*G + g holds query s, so its absolute position is pos + r // G."""
+    r = jax.lax.broadcasted_iota(jnp.int32, (Sq * G, 1), 0)
+    return pos + r // G
+
+
+def _paged_prefill_kernel(pt_ref, pos_ref, q_ref, k_ref, v_ref, o_ref,
+                          m_ref, l_ref, acc_ref, *, page, Sq, G, hd, window,
+                          cap, scale, n_blocks):
+    # q_ref: (1, 1, Sq, G, hd) — one (batch, kv-head)'s chunk of queries,
+    # flattened to (Sq*G, hd) rows; k_ref/v_ref: (1, page, 1, hd) one
+    # physical page of this kv head, walked exactly like decode but with a
+    # per-row causal mask (query t sees kpos <= pos + t).
+    b = pl.program_id(0)
+    i = pl.program_id(2)
+    pos = pos_ref[b]
+    lo, hi = _block_range(pos, page, window, span=Sq)
+
+    @pl.when(i == 0)
+    def _init():
+        _init_scratch(m_ref, l_ref, acc_ref)
+
+    @pl.when((i >= lo) & (i <= hi))
+    def _block():
+        q = q_ref[...].reshape(Sq * G, hd).astype(F32) * scale
+        k = k_ref[...].reshape(page, hd).astype(F32)
+        v = v_ref[...].reshape(page, hd).astype(F32)
+        _block_update(q, k, v, _prefill_qpos(pos, Sq, G), i, page=page,
+                      window=window, cap=cap, m_ref=m_ref, l_ref=l_ref,
+                      acc_ref=acc_ref)
+
+    @pl.when(i == n_blocks - 1)
+    def _finalize():
+        _finalize_out(o_ref, l_ref, acc_ref)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "cap", "interpret"))
+def paged_prefill_fwd(q, pool_k, pool_v, page_table, positions, *,
+                      window=0, cap=0.0, interpret=False):
+    """Chunked-prefill attention over the page pool (prefill-with-cache).
+
+    q (B, Sq, H, hd) — one prompt chunk of queries per sequence, whose K/V
+    have already been scattered into the pool; pool_k/v (P, page, K, hd);
+    page_table (B, n_blocks) int32 (unused tails -> scratch page 0);
+    positions (B,) int32 absolute position of each chunk's FIRST token.
+    Query t of sequence b attends causally to kpos <= positions[b] + t —
+    the resident prompt prefix plus the chunk itself — via the same
+    scalar-prefetched page-table walk and _block_update body as decode, so
+    the dense (B, n_blocks*page, K, hd) prompt KV view is never
+    materialized. Returns (B, Sq, H, hd) in q.dtype."""
+    B, Sq, H, hd = q.shape
+    _, page, K, _ = pool_k.shape
+    G = H // K
+    n_blocks = page_table.shape[1]
+    scale = hd ** -0.5
+    qr = jnp.moveaxis(q.reshape(B, Sq, K, G, hd), 1, 2)  # (B, K, Sq, G, hd)
+
+    kernel = functools.partial(_paged_prefill_kernel, page=page, Sq=Sq, G=G,
+                               hd=hd, window=window, cap=cap, scale=scale,
+                               n_blocks=n_blocks)
+    kv_map = _kv_index_map(page, window, span=Sq)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, K, n_blocks),
+        in_specs=[
+            pl.BlockSpec((1, 1, Sq, G, hd),
+                         lambda b, k, i, pt, pos: (b, k, 0, 0, 0)),
+            pl.BlockSpec((1, page, 1, hd), kv_map),
+            pl.BlockSpec((1, page, 1, hd), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, 1, Sq, G, hd),
+                               lambda b, k, i, pt, pos: (b, k, 0, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((Sq * G, LANES), F32),    # running max m
+            pltpu.VMEM((Sq * G, LANES), F32),    # running sum l
+            pltpu.VMEM((Sq * G, hd), F32),       # output accumulator
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, K, Sq, G, hd), q.dtype),
+        interpret=interpret,
+    )(page_table, positions, qr, pool_k, pool_v)
+    return jnp.moveaxis(out, 2, 1).reshape(B, Sq, H, hd)
+
+
+def _paged_prefill_quant_kernel(pt_ref, pos_ref, q_ref, k_ref, ks_ref,
+                                v_ref, vs_ref, o_ref, m_ref, l_ref, acc_ref,
+                                *, page, Sq, G, hd, bits, window, cap, scale,
+                                n_blocks):
+    # The fused-dequant chunked-prefill walk: int8/int4 pages + scale tiles
+    # ride the scalar-prefetched page-table walk (as in the decode quant
+    # kernel); the per-row causal chunk mask comes from _prefill_qpos.
+    b = pl.program_id(0)
+    i = pl.program_id(2)
+    pos = pos_ref[b]
+    lo, hi = _block_range(pos, page, window, span=Sq)
+
+    @pl.when(i == 0)
+    def _init():
+        _init_scratch(m_ref, l_ref, acc_ref)
+
+    @pl.when((i >= lo) & (i <= hi))
+    def _block():
+        q = q_ref[...].reshape(Sq * G, hd).astype(F32) * scale
+
+        def dequant(int_ref, scale_ref):
+            qv = int_ref[...].reshape(page, -1)
+            if bits == 4:
+                qv = ref.unpack_int4_hd(qv)
+            return qv.astype(F32) * scale_ref[...].reshape(page, 1)
+
+        _block_update(q, dequant(k_ref, ks_ref), dequant(v_ref, vs_ref),
+                      _prefill_qpos(pos, Sq, G), i, page=page, window=window,
+                      cap=cap, m_ref=m_ref, l_ref=l_ref, acc_ref=acc_ref)
+
+    @pl.when(i == n_blocks - 1)
+    def _finalize():
+        _finalize_out(o_ref, l_ref, acc_ref)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "cap", "interpret"))
+def paged_prefill_quant_fwd(q, pool_k, k_scale, pool_v, v_scale,
+                            page_table, positions, *, window=0, cap=0.0,
+                            interpret=False):
+    """Fused-dequant chunked-prefill attention over a quantized page pool.
+
+    q (B, Sq, H, hd) fp chunk queries (K/V already quantized into the
+    pool); pool_k/v (P, page, K, hd_store) int8 with hd_store = hd (int8)
+    or hd//2 (int4 packed along head_dim); k_scale/v_scale (P, page, K)
+    fp32; page_table (B, n_blocks); positions (B,) chunk-start positions.
+    Same walk as paged_prefill_fwd with dequantization inside the block
+    loop. Returns (B, Sq, H, hd) in q.dtype."""
+    B, Sq, H, hd = q.shape
+    _, page, K, hd_store = pool_k.shape
+    bits = ref.kv_bits_of(pool_k, hd)
+    G = H // K
+    n_blocks = page_table.shape[1]
+    scale = hd ** -0.5
+    qr = jnp.moveaxis(q.reshape(B, Sq, K, G, hd), 1, 2)  # (B, K, Sq, G, hd)
+
+    kernel = functools.partial(_paged_prefill_quant_kernel, page=page, Sq=Sq,
+                               G=G, hd=hd, bits=bits, window=window, cap=cap,
+                               scale=scale, n_blocks=n_blocks)
+    kv_map = _kv_index_map(page, window, span=Sq)
+
+    def scale_map(b, k, i, pt, pos):
+        return kv_map(b, k, i, pt, pos)[:3]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, K, n_blocks),
+        in_specs=[
+            pl.BlockSpec((1, 1, Sq, G, hd),
+                         lambda b, k, i, pt, pos: (b, k, 0, 0, 0)),
+            pl.BlockSpec((1, page, 1, hd_store), kv_map),
+            pl.BlockSpec((1, page, 1), scale_map),
+            pl.BlockSpec((1, page, 1, hd_store), kv_map),
+            pl.BlockSpec((1, page, 1), scale_map),
+        ],
+        out_specs=pl.BlockSpec((1, 1, Sq, G, hd),
+                               lambda b, k, i, pt, pos: (b, k, 0, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((Sq * G, LANES), F32),    # running max m
+            pltpu.VMEM((Sq * G, LANES), F32),    # running sum l
+            pltpu.VMEM((Sq * G, hd), F32),       # output accumulator
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, K, Sq, G, hd), q.dtype),
+        interpret=interpret,
+    )(page_table, positions, qr, pool_k, k_scale, pool_v, v_scale)
+    return jnp.moveaxis(out, 2, 1).reshape(B, Sq, H, hd)

@@ -168,47 +168,63 @@ def _paged_block_walk(q, load_k, load_v, K, hd, page, n_blocks, positions, *,
     ``load_v`` map a block index to its fp32 (B, page, K, hd) tile — a pool
     gather for the fp path, gather + dequant for the quantized one.
 
+    q is (B, Sq, H, hd): Sq == 1 is the decode walk, Sq > 1 the
+    chunked-prefill walk — query t of sequence b sits at absolute position
+    ``positions[b] + t`` and attends causally to every pool slot at or
+    before it (the resident prompt prefix plus the chunk's own already-
+    written K/V).
+
     Walks `lax.fori_loop` over the data-dependent block range —
-    ``[min(pos-window+1), max(pos)]`` across the batch — so the dense
-    chronological (B, n_blocks*page, K, hd) KV view is never built and
-    local-window layers do window-trimmed walks instead of full-length
-    masking. Scores are staged per-block into a (B,K,G,T) fp32 buffer so
-    the softmax itself is a single full-row pass, matching the dense
-    path's normalization exactly."""
-    B, H, _ = q.shape
+    ``[min(first qpos) - window + 1, max(last qpos)]`` across the batch —
+    so the dense chronological (B, n_blocks*page, K, hd) KV view is never
+    built and local-window layers do window-trimmed walks instead of
+    full-length masking. Scores are staged per-block into a (B,K,G,Sq,T)
+    fp32 buffer so the softmax itself is a single full-row pass, matching
+    the dense path's normalization exactly."""
+    B, Sq, H, _ = q.shape
     G = H // K
     T = n_blocks * page
     scale = hd ** -0.5
     NEG = -2.0 ** 30
-    qf = q.astype(F32).reshape(B, K, G, hd)
+    # (B, Sq, K, G, hd) -> (B, K, G, Sq, hd): head h = k*G + g, matching the
+    # decode reshape convention.
+    qf = jnp.moveaxis(q.astype(F32).reshape(B, Sq, K, G, hd), 1, 3)
+    qpos = positions[:, None] + jnp.arange(Sq, dtype=jnp.int32)  # (B, Sq)
 
-    hi = jnp.max(positions) // page + 1            # blocks any sequence needs
+    # blocks any query needs; a final chunk padded past the page-table
+    # width must not walk past it (the overrun blocks hold only padding
+    # queries, which are garbage by contract) — without the clamp the
+    # staging offset saturates at T-page and clobbers the last real
+    # block's scores.
+    hi = jnp.minimum((jnp.max(positions) + Sq - 1) // page + 1, n_blocks)
     if window:
         lo = jnp.maximum((jnp.min(positions) - window + 1) // page, 0)
     else:
         lo = jnp.zeros((), jnp.int32)
 
     def score_block(i, s_buf):
-        s = jnp.einsum("bkgd,bpkd->bkgp", qf, load_k(i)) * scale
+        s = jnp.einsum("bkgsd,bpkd->bkgsp", qf, load_k(i)) * scale
         if cap:
             s = cap * jnp.tanh(s / cap)
         kpos = i * page + jnp.arange(page)
-        valid = kpos[None, :] <= positions[:, None]
+        valid = kpos[None, None, :] <= qpos[:, :, None]          # (B, Sq, p)
         if window:
-            valid &= kpos[None, :] > positions[:, None] - window
-        s = jnp.where(valid[:, None, None, :], s, NEG)
-        return jax.lax.dynamic_update_slice(s_buf, s, (0, 0, 0, i * page))
+            valid &= kpos[None, None, :] > qpos[:, :, None] - window
+        s = jnp.where(valid[:, None, None], s, NEG)
+        return jax.lax.dynamic_update_slice(s_buf, s, (0, 0, 0, 0, i * page))
 
-    s_buf = jnp.full((B, K, G, T), NEG, F32)
+    s_buf = jnp.full((B, K, G, Sq, T), NEG, F32)
     s_buf = jax.lax.fori_loop(lo, hi, score_block, s_buf)
     w = jax.nn.softmax(s_buf, axis=-1)
 
     def pv_block(i, acc):
-        wb = jax.lax.dynamic_slice(w, (0, 0, 0, i * page), (B, K, G, page))
-        return acc + jnp.einsum("bkgp,bpkd->bkgd", wb, load_v(i))
+        wb = jax.lax.dynamic_slice(w, (0, 0, 0, 0, i * page),
+                                   (B, K, G, Sq, page))
+        return acc + jnp.einsum("bkgsp,bpkd->bkgsd", wb, load_v(i))
 
-    o = jax.lax.fori_loop(lo, hi, pv_block, jnp.zeros((B, K, G, hd), F32))
-    return o.reshape(B, H, hd).astype(q.dtype)
+    o = jax.lax.fori_loop(lo, hi, pv_block,
+                          jnp.zeros((B, K, G, Sq, hd), F32))
+    return jnp.moveaxis(o, 3, 1).reshape(B, Sq, H, hd).astype(q.dtype)
 
 
 def paged_attention_ref(q, pool_k, pool_v, page_table, positions, *,
@@ -221,6 +237,22 @@ def paged_attention_ref(q, pool_k, pool_v, page_table, positions, *,
     positions (B,) int32 absolute position of the query token (== index of
     the newest cached token). H = K*G (GQA). Walk semantics in
     _paged_block_walk."""
+    return paged_prefill_ref(q[:, None], pool_k, pool_v, page_table,
+                             positions, window=window, cap=cap)[:, 0]
+
+
+def paged_prefill_ref(q, pool_k, pool_v, page_table, positions, *,
+                      window=0, cap=0.0):
+    """Block-walking chunked-prefill attention (the CPU serving fallback and
+    the semantics oracle for paged_prefill_fwd).
+
+    q (B, Sq, H, hd) one prompt chunk per sequence, whose K/V have already
+    been written into the pool; pool_k/v (P, page, K, hd); page_table
+    (B, n_blocks) int32 with unused tails on scratch page 0; positions (B,)
+    int32 absolute position of each chunk's FIRST token (the resident
+    prefix length). Query t attends causally to pool slots at
+    kpos <= positions[b] + t — the prompt prefix resident in the pool plus
+    the chunk itself. Walk semantics in _paged_block_walk."""
     hd = q.shape[-1]
     _, page, K, _ = pool_k.shape
     return _paged_block_walk(
@@ -257,6 +289,36 @@ def paged_attention_dense_ref(q, pool_k, pool_v, page_table, positions, *,
     return out.astype(q.dtype)
 
 
+def paged_prefill_dense_ref(q, pool_k, pool_v, page_table, positions, *,
+                            window=0, cap=0.0):
+    """Dense chunked-prefill oracle: gather pages chronologically, mask each
+    chunk query causally at its absolute position, softmax. Test-only —
+    materializes exactly the (B, T, K, hd) view the prefill walk avoids.
+    q (B, Sq, H, hd); positions (B,) chunk-start positions."""
+    B, Sq, H, hd = q.shape
+    K = pool_k.shape[2]
+    k = pool_k[page_table].reshape(B, -1, K, hd)
+    v = pool_v[page_table].reshape(B, -1, K, hd)
+    T = k.shape[1]
+    G = H // K
+    if G > 1:
+        k = jnp.repeat(k, G, axis=2)
+        v = jnp.repeat(v, G, axis=2)
+    s = jnp.einsum("bshd,bkhd->bhsk", q.astype(F32), k.astype(F32))
+    s = s * (hd ** -0.5)
+    if cap:
+        s = cap * jnp.tanh(s / cap)
+    qpos = positions[:, None] + jnp.arange(Sq)[None, :]          # (B, Sq)
+    j = jnp.arange(T)
+    valid = j[None, None, :] <= qpos[:, :, None]                 # (B, Sq, T)
+    if window:
+        valid &= j[None, None, :] > qpos[:, :, None] - window
+    s = jnp.where(valid[:, None], s, -2.0 ** 30)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhsk,bkhd->bshd", w, v.astype(F32))
+    return out.astype(q.dtype)
+
+
 def paged_attention_quant_ref(q, pool_k, k_scale, pool_v, v_scale,
                               page_table, positions, *, window=0, cap=0.0):
     """Block-walking paged decode attention over a *quantized* page pool
@@ -274,6 +336,18 @@ def paged_attention_quant_ref(q, pool_k, k_scale, pool_v, v_scale,
     (B, n_blocks*page, K, hd) fp KV view is never built (asserted on the
     decode jaxpr in tests/test_kvquant.py). Walk semantics shared with the
     fp ref via _paged_block_walk."""
+    return paged_prefill_quant_ref(q[:, None], pool_k, k_scale, pool_v,
+                                   v_scale, page_table, positions,
+                                   window=window, cap=cap)[:, 0]
+
+
+def paged_prefill_quant_ref(q, pool_k, k_scale, pool_v, v_scale,
+                            page_table, positions, *, window=0, cap=0.0):
+    """Chunked-prefill walk over a *quantized* page pool: the chunk's K/V
+    are already quantized into the pool, and each block is dequantized
+    inside the walk exactly as in paged_attention_quant_ref. q (B, Sq, H,
+    hd) fp; positions (B,) int32 chunk-start positions (see
+    paged_prefill_ref)."""
     hd = q.shape[-1]
     _, page, K, _ = pool_k.shape
     bits = kv_bits_of(pool_k, hd)

@@ -20,8 +20,8 @@ from pathlib import Path
 
 import jax
 
-from repro.configs import (ARCHS, SHAPES, TrainConfig, OptimConfig,
-                           assigned_cells, get_config, get_shape)
+from repro.configs import (SHAPES, TrainConfig, OptimConfig, assigned_cells,
+                           get_config, get_shape)
 from repro.distributed import sharding as shlib
 from repro.launch.mesh import make_production_mesh
 from repro.models.api import build_model

@@ -172,6 +172,15 @@ def main():
                     help="legacy admission: reserve every page of "
                          "prompt+max_new at admission instead of growing "
                          "lazily with preemption")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="engine mode: override the policy's roofline-"
+                         "derived prompt chunk (tokens per prefill tick; "
+                         "0 keeps the derived value)")
+    ap.add_argument("--no-chunked-prefill", action="store_true",
+                    help="engine mode: prefill whole prompts into padding "
+                         "buckets in one forward (the pre-chunking "
+                         "behaviour — one long prompt stalls every "
+                         "resident decode for its full prefill latency)")
     ap.add_argument("--expected-occupancy", type=float, default=None,
                     help="fraction of max_model_len the admission policy "
                          "assumes a typical sequence occupies (default "
@@ -261,18 +270,25 @@ def main():
                            expected_occupancy=occupancy,
                            param_bytes=model.param_bytes(),
                            kv_bits=kv_bits)
-    if args.max_batch:
+    if args.max_batch or args.prefill_chunk:
         import dataclasses
-        policy = dataclasses.replace(policy, max_batch=args.max_batch)
+        over = {}
+        if args.max_batch:
+            over["max_batch"] = args.max_batch
+        if args.prefill_chunk:
+            over["prefill_chunk"] = args.prefill_chunk
+        policy = dataclasses.replace(policy, **over)
     print(f"admission[{hw.name}]: max_batch={policy.max_batch} "
           f"prefill_chunk={policy.prefill_chunk} "
+          f"chunked={not args.no_chunked_prefill} "
           f"quant={policy.quant_bits}b "
           f"kv={policy.kv_bits or 'bf16'} pages={policy.num_pages} "
           f"page_size={policy.page_size} "
           f"(est decode {policy.est_decode_s * 1e3:.2f}ms/step)")
     engine = Engine(model, params, policy, temperature=args.temperature,
                     paged_kernel=args.paged_kernel,
-                    reserve_upfront=args.reserve_upfront)
+                    reserve_upfront=args.reserve_upfront,
+                    chunked_prefill=not args.no_chunked_prefill)
     reqs = _make_requests(args, cfg)
     t0 = time.time()
     outs = engine.run(reqs)
@@ -281,6 +297,7 @@ def main():
     print(f"{cfg.name}: served {len(reqs)} requests, {gen_total} tokens in "
           f"{dt:.2f}s ({gen_total / dt:.1f} tok/s, "
           f"{engine.stats['decode_ticks']} decode ticks, "
+          f"{engine.stats['prefill_chunks']} prefill chunks, "
           f"{engine.stats['preemptions']} preemptions, "
           f"{engine.stats['grown_pages']} pages grown)")
     first = outs[0]

@@ -12,7 +12,7 @@ import argparse
 import jax
 
 from repro.configs import (OptimConfig, TrainConfig, get_config, get_shape,
-                           tiny_config, SHAPES)
+                           tiny_config)
 from repro.configs.base import ShapeConfig
 from repro.data.pipeline import DataConfig
 from repro.models.api import build_model

@@ -11,14 +11,13 @@ kernel per the active bitwidth policy.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, Optional
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
 
 from repro.models import encdec, transformer
 from repro.models import params as plib
-from repro.models.layers import cross_entropy
 
 F32 = jnp.float32
 
@@ -97,6 +96,18 @@ class Model:
         return transformer.decode_step_paged(params, pool, page_table, token,
                                              positions, self.cfg, ac=ac,
                                              dot=dot, kernel=kernel)
+
+    def prefill_chunk_paged(self, params, pool, page_table, tokens,
+                            positions, *, dot=None, kernel="auto"):
+        """Chunked prefill: run one prompt chunk (tokens (B, Sq), first
+        token of sequence b at absolute position ``positions[b]``) through
+        the model, scattering its K/V into the paged pool and attending
+        over the pool itself (resident prefix + chunk). Returns
+        (hidden (B, Sq, D), new_pool); unembed the rows you need via
+        ``unembed``. See transformer.prefill_chunk_paged."""
+        return transformer.prefill_chunk_paged(params, pool, page_table,
+                                               tokens, positions, self.cfg,
+                                               dot=dot, kernel=kernel)
 
     # -- caches & inputs ----------------------------------------------------
     def cache_specs(self, batch: int, seq_len: int):

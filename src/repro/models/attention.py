@@ -12,7 +12,7 @@ Attention logits are computed in fp32; RoPE is applied at cache-write time
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
@@ -254,6 +254,78 @@ def attention_decode_paged(p, x, pool_k, pool_v, page_table, positions,
         o = kops.paged_attention(q[:, 0], pool_k, pool_v, page_table,
                                  positions, window=window,
                                  cap=cfg.attn_softcap, mode=kernel)[:, None]
+    dot_o = dot or (lambda a, w, name: jnp.einsum(
+        "bsnh,nhd->bsd", a, w))
+    return dot_o(o, p["wo"], "attn_o"), pool_k, pool_v
+
+
+def attention_prefill_paged(p, x, pool_k, pool_v, page_table, positions,
+                            kind: str, cfg, *, dot=None, kernel: str = "auto"):
+    """Chunked prefill against a paged KV pool (prefill-with-cache).
+
+    x           (B, Sq, D)  one prompt chunk's activations per sequence
+    pool_k/v    (P, page, K, hd)  this layer's physical page pool (or the
+                quantized ``{"q", "scale"}`` dicts, see below)
+    page_table  (B, n_pages) int32; unused tails -> scratch page 0
+    positions   (B,) int32  absolute position of each chunk's FIRST token
+                (== the number of prompt tokens already resident in the
+                pool for that sequence)
+
+    The chunk's roped k/v are scattered into their pages first — token t
+    at page ``page_table[b, (pos+t) // page]`` slot ``(pos+t) % page`` —
+    then attention walks the sequence's pages with the chunked-prefill
+    kernel: query t attends causally to every pool slot at
+    ``kpos <= positions[b] + t``, i.e. the resident prompt prefix plus the
+    chunk itself. No dense chronological prompt KV view is materialized on
+    any path, and the final chunk's padding garbage stays behind the
+    causal mask exactly like bucket padding did (overwritten by decode in
+    position order).
+
+    Quantized pools quantize the chunk on write (per-token per-head
+    scales, the same mapping as the decode scatter) and run the
+    fused-dequant prefill walk.
+
+    Returns (out (B, Sq, D), pool_k, pool_v).
+    """
+    quantized = isinstance(pool_k, dict)
+    page = (pool_k["q"] if quantized else pool_k).shape[1]
+    B, Sq, _ = x.shape
+    n_blocks = page_table.shape[1]
+    abs_pos = positions[:, None] + jnp.arange(Sq, dtype=jnp.int32)[None, :]
+    q, k_new, v_new = qkv(p, x, cfg.rope_theta, abs_pos, dot=dot)
+    # A final chunk padded past the page-table width routes its overflow
+    # rows to the scratch page explicitly: an unclamped gather fills OOB
+    # indices with INT_MIN, which the promise_in_bounds scatter below
+    # would treat as undefined behaviour.
+    blocks = abs_pos // page                                    # (B, Sq)
+    pids = jnp.take_along_axis(page_table,
+                               jnp.minimum(blocks, n_blocks - 1), axis=1)
+    pids = jnp.where(blocks < n_blocks, pids, 0)
+    slots = abs_pos % page
+    window = cfg.window_size if kind == "local" else 0
+    if quantized:
+        hd = q.shape[-1]
+        bits = kref.kv_bits_of(pool_k["q"], hd)
+
+        def write(pool, new):                        # new: (B, Sq, K, hd)
+            qv, sc = kref.quantize_kv(new, bits)
+            return {"q": pool["q"].at[pids, slots].set(
+                        qv, mode="promise_in_bounds"),
+                    "scale": pool["scale"].at[pids, slots].set(
+                        sc, mode="promise_in_bounds")}
+
+        pool_k = write(pool_k, k_new)
+        pool_v = write(pool_v, v_new)
+        o = kops.paged_attention_prefill_quant(
+            q, pool_k["q"], pool_k["scale"], pool_v["q"], pool_v["scale"],
+            page_table, positions, window=window, cap=cfg.attn_softcap,
+            mode=kernel)
+    else:
+        pool_k = pool_k.at[pids, slots].set(k_new, mode="promise_in_bounds")
+        pool_v = pool_v.at[pids, slots].set(v_new, mode="promise_in_bounds")
+        o = kops.paged_attention_prefill(q, pool_k, pool_v, page_table,
+                                         positions, window=window,
+                                         cap=cfg.attn_softcap, mode=kernel)
     dot_o = dot or (lambda a, w, name: jnp.einsum(
         "bsnh,nhd->bsd", a, w))
     return dot_o(o, p["wo"], "attn_o"), pool_k, pool_v

@@ -11,7 +11,6 @@ cross-attn KV computed once from the encoder output at prefill.
 from __future__ import annotations
 
 import math
-from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

@@ -19,7 +19,6 @@ kernel-side fix.
 from __future__ import annotations
 
 import functools
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp

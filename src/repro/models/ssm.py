@@ -44,7 +44,6 @@ def mamba_defs(cfg) -> dict:
 def _split_proj(cfg, zxbcdt):
     di = cfg.d_inner
     G, N = cfg.ssm.n_groups, cfg.ssm.d_state
-    H = cfg.ssm_heads
     z, xs, Bm, Cm, dt = jnp.split(
         zxbcdt, [di, 2 * di, 2 * di + G * N, 2 * di + 2 * G * N], axis=-1)
     return z, xs, Bm, Cm, dt

@@ -18,13 +18,12 @@ from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.models import attention as attn
 from repro.models import moe as moe_lib
 from repro.models import ssm as ssm_lib
-from repro.models.layers import (cross_entropy, embed_defs, ffn_apply,
-                                 ffn_defs, norm_def, rms_norm, softcap)
+from repro.models.layers import (embed_defs, ffn_apply, ffn_defs, norm_def,
+                                 rms_norm, softcap)
 from repro.models.params import PDef, stacked
 
 F32 = jnp.float32
@@ -467,6 +466,62 @@ def decode_step_paged(params, pool, page_table, token, positions, cfg, *,
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)
     logits = unembed(params, x, cfg, dot=dot)
     return logits, new_pool
+
+
+# --------------------------------------------------------- paged prefill ----
+def _dense_block_prefill_paged(p, x, pool_kv, page_table, positions, kind,
+                               cfg, dot=None, kernel="auto"):
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    a, ck, cv = attn.attention_prefill_paged(
+        p["attn"], h, pool_kv["k"], pool_kv["v"], page_table, positions,
+        kind["attn"], cfg, dot=dot, kernel=kernel)
+    if cfg.sandwich_norm:
+        a = rms_norm(a, p["ln1_post"], cfg.norm_eps)
+    x = x + a
+    h = rms_norm(x, p["ln2"], cfg.norm_eps)
+    if kind["moe"]:
+        f, _ = moe_lib.moe_apply(p["moe"], h, cfg.moe, cfg.activation,
+                                 dot=dot)
+    else:
+        f = ffn_apply(p["ffn"], h, cfg.activation, dot=dot)
+    if cfg.sandwich_norm:
+        f = rms_norm(f, p["ln2_post"], cfg.norm_eps)
+    return x + f, {"k": ck, "v": cv}
+
+
+def prefill_chunk_paged(params, pool, page_table, tokens, positions, cfg, *,
+                        dot=None, kernel="auto"):
+    """One chunked-prefill step: run ``tokens`` (B, Sq) — a contiguous
+    prompt chunk whose first token sits at absolute position
+    ``positions[b]`` — through every layer, writing each layer's chunk K/V
+    into the paged pool and attending over the pool itself (resident
+    prompt prefix + the chunk, causal within the chunk). The engine calls
+    this once per tick per mid-prefill sequence, so one long prompt costs
+    many small ticks instead of one decode-stalling bucket.
+
+    Returns (hidden (B, Sq, D) final-norm hidden states, new_pool) — the
+    caller unembeds only the rows it needs (the last real prompt position
+    of the final chunk; intermediate chunks need no logits at all).
+    """
+    if cfg.family not in ("dense", "moe", "vlm"):
+        raise NotImplementedError(
+            f"paged prefill supports attention-cache families only, "
+            f"got {cfg.family!r}")
+    x = embed_tokens(params, tokens, cfg)
+    P = period_of(cfg)
+    kinds = sublayer_kinds(cfg)
+
+    def group_body(h, xs):
+        blocks, pool_g = xs
+        new_g = {}
+        for j in range(P):
+            h, new_g[f"sub{j}"] = _dense_block_prefill_paged(
+                blocks[f"sub{j}"], h, pool_g[f"sub{j}"], page_table,
+                positions, kinds[j], cfg, dot=dot, kernel=kernel)
+        return h, new_g
+
+    x, new_pool = jax.lax.scan(group_body, x, (params["blocks"], pool))
+    return rms_norm(x, params["final_norm"], cfg.norm_eps), new_pool
 
 
 def normalize_kv_bits(cfg, kv_bits) -> Optional[Tuple[int, ...]]:

@@ -1,2 +1,5 @@
 from repro.optim.adamw import (adamw_init, adamw_update, cosine_lr,
                                clip_by_global_norm, opt_state_logical_specs)
+
+__all__ = ["adamw_init", "adamw_update", "cosine_lr",
+           "clip_by_global_norm", "opt_state_logical_specs"]

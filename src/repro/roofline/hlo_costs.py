@@ -71,7 +71,6 @@ class Computation:
 def parse_computations(hlo: str) -> Dict[str, Computation]:
     comps: Dict[str, Computation] = {}
     cur = None
-    entry_alias = None
     for line in hlo.splitlines():
         if line.startswith("}"):
             cur = None

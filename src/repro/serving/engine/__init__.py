@@ -31,6 +31,40 @@ so stale KV from a previous owner stays behind the mask. The legacy
 worst-case policy — ``ceil((prompt + max_new) / page_size)`` pages reserved
 at admission, no preemption — remains available as ``reserve_upfront``.
 
+Chunked-prefill lifecycle
+-------------------------
+A sequence's prompt enters the pool in ``policy.prefill_chunk``-token
+chunks, one per engine tick (``ActiveSeq.prefill_progress`` tracks the
+resident prefix). Each chunk runs the prefill-with-cache forward
+(``Model.prefill_chunk_paged``): its roped K/V are scattered into the
+sequence's pages — quantize-on-write on quantized pools — and its
+attention walks the page table itself, reading the resident prefix plus
+the chunk (causal within the chunk; kernels/paged_attention.py's
+``paged_prefill_fwd`` on TPU, the pure-JAX walk elsewhere — the dense
+chronological prompt KV view is never materialized, asserted on the
+jaxpr). Chunk states per sequence:
+
+    queued -> chunk-pending (admitted; 0 < prefill_progress < prompt,
+              holds a batch slot, excluded from the decode batch)
+           -> decode-ready (final chunk landed: the last real prompt row
+              is unembedded, the first token sampled)
+           -> finished / preempted (a mid-prefill victim is requeued at
+              its chunk boundary and simply restarts the prompt at
+              re-admission — prefill is deterministic, so resumption is
+              token-identical)
+
+``prefill_stall_factor`` is therefore a **per-tick** stall budget: the
+admission policy sizes ``prefill_chunk`` as the largest chunk whose
+prefill-with-cache latency (priced at worst-case resident context) stays
+within ``prefill_stall_factor * decode_slo_s``, so a long prompt costs
+more ticks — never a longer stall of resident decodes. Whole-prompt
+bucketed prefill (``chunked_prefill=False``, one forward padded to the
+chunk quantum) is kept as the pre-chunking baseline; greedy outputs are
+identical either way (asserted across chunk sizes, page sizes, GQA,
+windows, and quantized pools in tests/test_chunked_prefill.py, with the
+stall win measured by the long-prompt bench and enforced by the CI
+bench-gate).
+
 The scheduler packs active sequences into a fixed-width batch; a decode
 tick calls ``Model.decode_step_paged`` with:
 
@@ -68,11 +102,12 @@ wholly behind the window are released back to the allocator as decode
 advances (``Scheduler.trim_window``; freed slots ride along in the page
 table as scratch-page placeholders the walk never reads).
 
-Modules: `pool` (page allocator + device pool + bounded jit caches),
-`scheduler` (FIFO admission / growth / preemption / eviction / window-trim
-bookkeeping), `admission` (roofline-derived policy, expected-footprint
-batch sizing, KV-bit-aware page sizing), `engine` (the host loop tying
-them to the model); the KV quantization subsystem itself lives in
+Modules: `pool` (page allocator + device pool + bounded jit caches +
+span-capable prefill writer), `scheduler` (FIFO admission / growth /
+preemption / eviction / window-trim / prefill-progress bookkeeping),
+`admission` (roofline-derived policy, expected-footprint batch sizing,
+KV-bit-aware page sizing, per-tick chunk sizing), `engine` (the host loop
+tying them to the model); the KV quantization subsystem itself lives in
 `serving/kvquant`.
 """
 from repro.serving.engine.admission import AdmissionPolicy, derive_policy

@@ -8,9 +8,12 @@ must not answer by guessing:
   * ``max_batch``   — largest in-flight batch whose decode step still meets
                       the latency SLO (decode is memory-bound on the edge
                       chip, compute/collective-bound on pod slices)
-  * ``prefill_chunk`` — prompt padding bucket: the largest chunk whose
-                      prefill latency keeps the decode stall bounded, so
-                      interleaved prefill ticks don't starve decode
+  * ``prefill_chunk`` — prompt chunk per engine tick: the largest chunk
+                      whose prefill-with-cache forward keeps the
+                      *per-tick* decode stall within the stall budget
+                      (``prefill_stall_factor`` SLOs) — long prompts cost
+                      more ticks, never a bigger stall. Whole-prompt mode
+                      reuses it as the padding-bucket quantum.
   * ``quant_bits``  — 16 (bf16) unless weights + one sequence of KV exceed
                       the HBM budget, in which case the HAQ default bit
                       policy (serving/quant.py) is applied: 8, then 4
@@ -38,11 +41,11 @@ class AdmissionPolicy:
     page_size: int
     num_pages: int          # pages the target's HBM can hold (incl. scratch)
     max_batch: int          # max in-flight sequences
-    prefill_chunk: int      # prompt padding bucket (tokens)
+    prefill_chunk: int      # prompt chunk per tick / padding quantum
     quant_bits: int         # 16 = bf16 weights; 8/4 = HAQ default bits
     decode_slo_s: float
     est_decode_s: float     # roofline decode-step latency at max_batch
-    est_prefill_s: float    # roofline prefill latency at prefill_chunk
+    est_prefill_s: float    # roofline per-chunk (per-tick) prefill latency
     # stored KV-cache bits per sub-layer slot (serving/kvquant); None = bf16
     # pool. Cycled over layers like attn_pattern.
     kv_bits: Optional[Tuple[int, ...]] = None
@@ -204,17 +207,23 @@ def derive_policy(cfg, hw: hwm.Hardware, *, max_model_len: int,
     est_decode = step_latency(cfg, max_batch, 1, max_model_len, hw,
                               w_bits=quant_bits, kv_bits=kv_bits)
 
-    # Prefill bucket: largest power-of-two chunk whose prefill keeps the
-    # decode stall within prefill_stall_factor SLOs.
+    # Prefill chunk: largest power-of-two chunk whose prefill-with-cache
+    # forward — priced at the worst-case resident context, since a late
+    # chunk of a long prompt attends the whole prefix in the pool — fits
+    # the stall budget. The engine runs one chunk per tick per sequence,
+    # so prefill_stall_factor bounds the *per-tick* decode stall directly:
+    # long prompts cost more ticks, never a bigger bucket.
     stall_budget = prefill_stall_factor * decode_slo_s
     chunk = 16
     c = 16
     while c * 2 <= max_model_len:
         c *= 2
-        if step_latency(cfg, 1, c, c, hw, w_bits=quant_bits) > stall_budget:
+        if step_latency(cfg, 1, c, max_model_len, hw,
+                        w_bits=quant_bits) > stall_budget:
             break
         chunk = c
-    est_prefill = step_latency(cfg, 1, chunk, chunk, hw, w_bits=quant_bits)
+    est_prefill = step_latency(cfg, 1, chunk, max_model_len, hw,
+                               w_bits=quant_bits)
 
     if kv_bits is not None and isinstance(kv_bits, int):
         kv_bits = (kv_bits,)

@@ -3,38 +3,56 @@ loop of interleaved prefill and decode ticks.
 
 One ``step()``:
   1. admission — backfill free batch slots from the FIFO queue (page-
-     and slot-gated, see scheduler.py), running each admitted request's
-     prefill (prompt padded to the policy's roofline-derived bucket) and
-     scattering its KV into the request's pages;
-  2. growth — every live sequence whose decode position crosses a page
-     boundary grows by one page; on pool exhaustion the youngest sequence
-     is preempted (freed + requeued as a prompt-extension) to make room,
-     oldest-first so the head of the line always drains;
-  3. decode tick — one batched ``decode_step_paged`` over the surviving
-     slots (idle slots ride along against the scratch page and are
-     ignored). The decode path walks pages with the Pallas paged-attention
-     kernel (pure-JAX block walk off-TPU) — no dense chronological KV view
-     is ever materialized;
-  4. eviction — finished sequences free their pages/slot immediately, so
+     and slot-gated, see scheduler.py). Admitted sequences owe their
+     prompt to the pool: in chunked mode (default) nothing runs yet; with
+     ``chunked_prefill=False`` the whole prompt runs here, padded to the
+     policy's bucket, and is scattered into the request's pages;
+  2. chunked prefill — every mid-prefill sequence advances by at most ONE
+     ``policy.prefill_chunk``-token chunk (prefill-with-cache forward:
+     the chunk's K/V are written into the sequence's pages and its
+     attention walks the pool — resident prefix + chunk). The final chunk
+     unembeds the last real prompt row and samples the first token; until
+     then the sequence stays out of the decode batch, so one long prompt
+     costs many bounded ticks instead of one decode-stalling bucket;
+  3. growth — every decode-ready sequence whose position crosses a page
+     boundary grows by one page; on pool exhaustion the youngest active
+     sequence is preempted (freed + requeued as a prompt-extension; a
+     mid-prefill victim simply restarts its prompt at re-admission) to
+     make room, oldest-first so the head of the line always drains;
+  4. decode tick — one batched ``decode_step_paged`` over the surviving
+     prefill-complete slots (idle slots ride along against the scratch
+     page and are ignored). The decode path walks pages with the Pallas
+     paged-attention kernel (pure-JAX block walk off-TPU) — no dense
+     chronological KV view is ever materialized;
+  5. eviction — finished sequences free their pages/slot immediately, so
      the next step's admission backfills mid-flight.
 
 The decode closure is jitted ONCE per engine (fixed shapes: the policy's
-max_batch and page-table width); prefill and pool-writer jits are compiled
-per padding bucket and held in small LRU caches so long-running engines
-with many bucket shapes don't grow retrace caches without limit. When the
-policy's memory roofline demanded it, weights are HAQ-quantized
-(serving/quant.py) and the dequantizing ``dot`` is threaded through both
-paths. ``policy.kv_bits`` additionally selects the HAQ KV-quantized pool
-(serving/kvquant): pages stored int8/int4 with per-token per-head scales,
-quantize-on-write in both writers, fused dequant inside the paged-
-attention walk — the fp pool stays the exactness baseline. On all-local-
-attention models, pages wholly behind the sliding window are released back
-to the allocator each tick (scheduler.trim_window).
+max_batch and page-table width), and so is the chunk-prefill closure
+(fixed (1, chunk) tokens against the full-width page table, pool donated);
+whole-prompt prefill and pool-writer jits are compiled per padding bucket
+and held in small LRU caches so long-running engines with many bucket
+shapes don't grow retrace caches without limit. When the policy's memory
+roofline demanded it, weights are HAQ-quantized (serving/quant.py) and the
+dequantizing ``dot`` is threaded through both paths. ``policy.kv_bits``
+additionally selects the HAQ KV-quantized pool (serving/kvquant): pages
+stored int8/int4 with per-token per-head scales, quantize-on-write in all
+three writers (bucketed prefill, chunk forward, decode scatter), fused
+dequant inside the paged-attention walk — the fp pool stays the exactness
+baseline. On all-local-attention models, pages wholly behind the sliding
+window are released back to the allocator each tick
+(scheduler.trim_window).
+
+Observability: ``stall_log`` records, per decode tick, the seconds its
+already-ready sequences waited on prefill work that step (the per-tick
+stall ``prefill_stall_factor`` budgets); ``first_token_s`` records each
+request's time-to-first-token. Both feed the long-prompt section of
+benchmarks/bench_engine_throughput.py.
 """
 from __future__ import annotations
 
 import time
-from typing import Dict, List
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -61,7 +79,8 @@ class Engine:
 
     def __init__(self, model, params, policy: AdmissionPolicy, *,
                  temperature: float = 0.0, seed: int = 0, dot=None,
-                 paged_kernel: str = "auto", reserve_upfront: bool = False):
+                 paged_kernel: str = "auto", reserve_upfront: bool = False,
+                 chunked_prefill: bool = True):
         cfg = model.cfg
         if cfg.is_encdec or cfg.family not in ("dense", "moe") \
                 or cfg.frontend != "none":
@@ -130,10 +149,32 @@ class Engine:
         # every bucket's trace alive for the engine's lifetime).
         self._prefill_jits = JitLRU(self.PREFILL_JIT_CAP)
         self._make_prefill = lambda: jax.jit(prefill_fn)
+
+        # chunked prefill (default): ONE fixed-shape jit — (1, chunk)
+        # tokens against the full-width page table, pool donated like
+        # decode — instead of a per-bucket cache; the chunk writes its K/V
+        # into the sequence's pages and attends over the pool itself.
+        self.chunked = chunked_prefill
+        self._chunk_prefill = jax.jit(
+            lambda p, pool, pt, toks, pos: model.prefill_chunk_paged(
+                p, pool, pt, toks, pos, dot=dot, kernel=paged_kernel),
+            donate_argnums=(1,))
+        self._unembed_row = jax.jit(
+            lambda p, h, idx: model.unembed(
+                p, jnp.take_along_axis(h, idx.reshape(1, 1, 1), axis=1),
+                dot=dot))
         self.stats = {"decode_ticks": 0, "decode_tokens": 0,
-                      "prefills": 0, "admitted": 0, "preemptions": 0,
-                      "grown_pages": 0, "trimmed_pages": 0}
+                      "prefills": 0, "prefill_chunks": 0, "admitted": 0,
+                      "preemptions": 0, "grown_pages": 0,
+                      "trimmed_pages": 0}
         self._outputs: Dict[int, np.ndarray] = {}
+        # observability for the long-prompt bench: per-decode-tick stall
+        # (prefill seconds the tick waited on this step) and per-request
+        # time-to-first-token, both relative to the trace clock started by
+        # run() (or the first step() if driven manually).
+        self.stall_log: List[float] = []
+        self.first_token_s: Dict[int, float] = {}
+        self._t0: Optional[float] = None
 
     # ------------------------------------------------------------- intake --
     def submit(self, req: Request) -> None:
@@ -146,24 +187,47 @@ class Engine:
             self.stats[k] = 0
         self.scheduler.num_preempted = 0
         self._outputs.clear()
+        self.stall_log.clear()
+        self.first_token_s.clear()
+        self._t0 = None
 
     # --------------------------------------------------------------- step --
     def step(self, now: float = float("inf")) -> List[int]:
-        """One scheduler tick: admit + prefill, then one batched decode.
-        Returns the rids that finished during this step. Finished sequences
-        are released the moment they finish — before the decode tick's
-        growth phase — so their pages backfill growth instead of tempting
-        the preemption picker."""
+        """One scheduler tick: admit, run prefill work (the whole prompt in
+        one bucketed forward, or — chunked mode, the default — at most ONE
+        prompt chunk per mid-prefill sequence), then one batched decode
+        over the prefill-complete sequences. Returns the rids that
+        finished during this step. Finished sequences are released the
+        moment they finish — before the decode tick's growth phase — so
+        their pages backfill growth instead of tempting the preemption
+        picker."""
+        if self._t0 is None:
+            self._t0 = time.monotonic()
         out: List[int] = []
+        ready_before = len(self.scheduler.decode_ready())
+        t_prefill = time.monotonic()
         for seq in self.scheduler.admit(now):
             self.stats["admitted"] += 1
-            self._run_prefill(seq)
-            if seq.is_done():
-                out.append(self._finish(seq))
-        live = list(self.scheduler.active.values())
+            if not self.chunked:
+                self._run_prefill(seq)
+                if seq.is_done():
+                    out.append(self._finish(seq))
+        if self.chunked:
+            for seq in self.scheduler.prefill_pending():
+                self._run_prefill_chunk(seq)
+                if seq.prefill_done and seq.is_done():
+                    out.append(self._finish(seq))
+        t_prefill = time.monotonic() - t_prefill
+        live = self.scheduler.decode_ready()
         if live:
             finished: List[ActiveSeq] = []
+            ticks_before = self.stats["decode_ticks"]
             self._decode_tick(live, finished)
+            if self.stats["decode_ticks"] > ticks_before and ready_before:
+                # per-decode-tick stall: seconds this tick's already-ready
+                # sequences waited on prefill work (0.0 when none ran) —
+                # the quantity prefill_stall_factor budgets per tick.
+                self.stall_log.append(t_prefill)
             for seq in finished:
                 out.append(self._finish(seq))
         return out
@@ -175,7 +239,26 @@ class Engine:
              np.asarray(seq.generated, np.int32)])
         return seq.req.rid
 
+    def _first_token(self, seq: ActiveSeq, logits_row) -> None:
+        """Sample the prompt's first generated token (prefill just
+        finished) and stamp the request's time-to-first-token."""
+        tok = sample_token(logits_row, self.temperature,
+                           self._step_key(seq))
+        seq.generated.append(tok)
+        seq.pos = len(seq.req.prompt)
+        self.stats["prefills"] += 1
+        # setdefault: a preempted sequence re-prefills its prompt-extension
+        # later, but its first token was already served — TTFT keeps the
+        # original timestamp.
+        self.first_token_s.setdefault(seq.req.rid,
+                                      time.monotonic() - self._t0)
+
     def _run_prefill(self, seq: ActiveSeq) -> None:
+        """Whole-prompt prefill (chunked_prefill=False): one forward over
+        the prompt padded to the policy's bucket, scattered into the
+        sequence's pages afterwards. One long prompt stalls every resident
+        decode for its full prefill latency — kept as the pre-chunking
+        baseline the bench compares against."""
         prompt = np.asarray(seq.req.prompt, np.int32)
         S = len(prompt)
         chunk = self.policy.prefill_chunk
@@ -186,11 +269,40 @@ class Engine:
         logits, cache = prefill(self.params, jnp.asarray(toks),
                                 jnp.asarray(S - 1, jnp.int32))
         self.kv.write_prefill(cache, seq.pages)
-        self.stats["prefills"] += 1
-        tok = sample_token(np.asarray(logits[0, 0]), self.temperature,
-                           self._step_key(seq))
-        seq.generated.append(tok)
-        seq.pos = S
+        seq.prefill_progress = S
+        self._first_token(seq, np.asarray(logits[0, 0]))
+
+    def _run_prefill_chunk(self, seq: ActiveSeq) -> None:
+        """One prompt chunk through the prefill-with-cache forward: the
+        chunk's K/V land in the sequence's pages and its attention walks
+        the pool (resident prefix + chunk). The final chunk unembeds the
+        last real prompt row and samples the first generated token; until
+        then the sequence stays out of the decode batch."""
+        prompt = np.asarray(seq.req.prompt, np.int32)
+        S = len(prompt)
+        C = self.policy.prefill_chunk
+        start = seq.prefill_progress
+        end = min(start + C, S)
+        toks = np.zeros((1, C), np.int32)
+        toks[0, :end - start] = prompt[start:end]
+        maxp = self.policy.pages_per_seq
+        pt = np.zeros((1, maxp), np.int32)
+        pt[0, :len(seq.pages)] = seq.pages
+        with quiet_donation():
+            hidden, self.kv.pool = self._chunk_prefill(
+                self.params, self.kv.pool, jnp.asarray(pt),
+                jnp.asarray(toks), jnp.asarray([start], jnp.int32))
+        # sync before the step's stall timer stops: dispatch is async, and
+        # an unblocked intermediate chunk would bill its compute to the
+        # decode tick instead of the stall it actually causes.
+        jax.block_until_ready(hidden)
+        seq.prefill_progress = end
+        seq.pos = end
+        self.stats["prefill_chunks"] += 1
+        if end == S:
+            logits = self._unembed_row(self.params, hidden,
+                                       jnp.asarray(S - 1 - start, jnp.int32))
+            self._first_token(seq, np.asarray(logits[0, 0]))
 
     def _is_live(self, seq: ActiveSeq) -> bool:
         return self.scheduler.active.get(seq.slot) is seq

@@ -129,7 +129,8 @@ class PagedKVPool:
     def num_free(self) -> int:
         return self.allocator.num_free
 
-    def write_prefill(self, cache, pages: Sequence[int]) -> None:
+    def write_prefill(self, cache, pages: Sequence[int], *,
+                      start: int = 0) -> None:
         """Scatter one request's prefill cache (full layout, B=1, bucket-
         padded length) into its pages. Jitted per (n_pages, cache_len) shape
         with the pool donated, so the write is an in-place scatter rather
@@ -139,13 +140,26 @@ class PagedKVPool:
         lands only inside the request's own pages and is masked (j <= pos)
         or overwritten by decode.
 
+        ``start`` writes a per-chunk *span*: a cache holding tokens
+        ``start..start+cache_len`` of the sequence lands at that offset
+        within ``pages`` (chunk boundaries must be page-aligned for this
+        writer; the chunked engine's own span writes happen inside the
+        jitted prefill-with-cache forward, which scatters at arbitrary
+        offsets — this host-side writer serves whole-prompt admission and
+        chunk-granular replay/tests). Pages past the span's end are
+        (re)padded, so spans must be written in chunk order.
+
         Quantized slots quantize on write: the bf16 prefill pages become
         int8/int4 codes + scale tiles in the same fused scatter (garbage
         slots quantize too, harmlessly — they stay behind the mask)."""
         from repro.kernels import ref as kref
 
-        n = len(pages)
         page = self.page_size
+        if start % page:
+            raise ValueError(
+                f"span start {start} is not page-aligned (page={page})")
+        pages = list(pages)[start // page:]
+        n = len(pages)
         Sp = jax.tree.leaves(cache)[0].shape[2]
         span = n * page
 

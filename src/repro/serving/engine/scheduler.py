@@ -49,11 +49,18 @@ class ActiveSeq:
     pages: List[int]
     birth: int = 0               # admission order (preemption picks max)
     pos: int = 0                 # tokens currently cached
+    prefill_progress: int = 0    # prompt tokens resident in the pool
     generated: List[int] = dataclasses.field(default_factory=list)
 
     @property
     def last_token(self) -> int:
         return self.generated[-1]
+
+    @property
+    def prefill_done(self) -> bool:
+        """True once the whole prompt is resident (and the first token
+        sampled) — chunk-pending sequences stay out of the decode batch."""
+        return self.prefill_progress >= len(self.req.prompt)
 
     def is_done(self) -> bool:
         if len(self.generated) >= self.req.max_new:
@@ -151,6 +158,18 @@ class Scheduler:
             seq.pages[:lo] = [0] * lo
         return len(dead)
 
+    def decode_ready(self) -> List[ActiveSeq]:
+        """Active sequences eligible for the decode batch: prompt fully
+        resident in the pool. Chunk-pending sequences keep their batch
+        slot but ride no decode tick until their final chunk lands."""
+        return [s for s in self.active.values() if s.prefill_done]
+
+    def prefill_pending(self) -> List[ActiveSeq]:
+        """Active sequences still owing prompt chunks, admission order —
+        the engine runs at most one chunk per tick for each."""
+        return sorted((s for s in self.active.values()
+                       if not s.prefill_done), key=lambda s: s.birth)
+
     def youngest_active(self) -> Optional[ActiveSeq]:
         """The preemption victim candidate: the most recently admitted
         active sequence. Pages always flow from younger to older — a
@@ -168,7 +187,14 @@ class Scheduler:
         outputs are unchanged. The caller's Request object is left intact —
         the extension rides a fresh Request with the same rid. (Sampled
         decode re-draws its RNG keys from the new generation offsets after
-        a preemption.)"""
+        a preemption.)
+
+        A mid-prefill victim (prefill_progress < prompt, nothing generated
+        yet) is only ever preempted at a chunk boundary — the engine runs
+        chunks between scheduler phases — and its partially written pages
+        are freed with the rest: re-admission restarts the prompt from
+        chunk 0, so resumption is trivially token-identical (prefill is
+        deterministic and the fresh ActiveSeq's prefill_progress is 0)."""
         del self.active[seq.slot]
         self.allocator.free([p for p in seq.pages if p != 0])
         self._free_slots.append(seq.slot)

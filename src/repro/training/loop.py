@@ -7,7 +7,6 @@ import time
 from typing import Callable, Dict, Optional
 
 import jax
-import numpy as np
 
 from repro.checkpoint.ckpt import AsyncCheckpointer, latest_step, restore
 from repro.data import pipeline as dp

@@ -6,7 +6,7 @@ hook (distributed.sharding.make_ac); `dot` the HAQ quantized-matmul hook.
 """
 from __future__ import annotations
 
-from typing import Any, Callable, Dict, Optional
+from typing import Any, Callable, Dict
 
 import jax
 import jax.numpy as jnp

@@ -9,9 +9,6 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs import ARCHS, tiny_config
-from repro.models.api import build_model
-
 
 @pytest.fixture(scope="session")
 def rng():

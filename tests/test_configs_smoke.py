@@ -5,8 +5,7 @@ import jax
 import jax.numpy as jnp
 import pytest
 
-from repro.configs import ARCHS, SHAPES, assigned_cells, get_config, \
-    tiny_config
+from repro.configs import ARCHS, assigned_cells, get_config, tiny_config
 from repro.models.api import build_model
 
 from conftest import tiny_batch

@@ -1,14 +1,11 @@
 """HAQ core (§4): site enumeration, budget back-off, policy evaluation,
 hardware-specific policies (the paper's central claim)."""
 import jax
-import jax.numpy as jnp
-import numpy as np
-import pytest
 
 from repro.configs import get_config, tiny_config
 from repro.core import haq
 from repro.core import quantization as q
-from repro.core.hardware_model import V5E_EDGE, V5E_POD, Hardware
+from repro.core.hardware_model import V5E_EDGE
 from repro.models.api import build_model
 
 from conftest import tiny_batch

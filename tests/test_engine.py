@@ -1,7 +1,6 @@
 """Continuous-batching engine: scheduler admission/eviction/backfill,
 roofline admission policy, paged-pool bookkeeping, and greedy equivalence
 with the sequential baseline."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp
@@ -394,12 +393,20 @@ def test_jit_lru_caches_are_bounded(gemma_tiny):
     assert len(lru) == 2 and lru.hits == 1 and lru.misses == 4
 
     model, params = gemma_tiny
-    engine = Engine(model, params, _policy(prefill_chunk=4))
+    engine = Engine(model, params, _policy(prefill_chunk=4),
+                    chunked_prefill=False)
     # 5 distinct prompt lengths -> 5 distinct padding buckets
     engine.run([_req(i, 4 * (i + 1), 2) for i in range(5)])
     assert len(engine._prefill_jits) <= Engine.PREFILL_JIT_CAP
     assert len(engine.kv._write_jit) <= engine.kv.WRITE_JIT_CAP
     assert engine._prefill_jits.misses == 5
+
+    # the chunked engine needs no padding-bucket jits at all: every
+    # prompt length rides the single fixed-shape chunk closure
+    engine = Engine(model, params, _policy(prefill_chunk=4))
+    engine.run([_req(i, 4 * (i + 1), 2) for i in range(5)])
+    assert len(engine._prefill_jits) == 0
+    assert len(engine.kv._write_jit) == 0
 
 
 @pytest.mark.slow

@@ -2,7 +2,6 @@
 round trips, fused-dequant kernel parity, bit-policy search + gating,
 KV-aware admission capacity, quantized engine drift bounds, window-trim
 page freeing, and the no-dense-fp-KV jaxpr guarantee."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp

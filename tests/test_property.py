@@ -1,5 +1,4 @@
 """Hypothesis property tests on system invariants (assignment req. (c))."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

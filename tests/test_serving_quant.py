@@ -8,7 +8,6 @@ from repro.models.api import build_model
 from repro.models.params import abstract_params, logical_specs
 from repro.serving import quant as sq
 
-from conftest import tiny_batch
 
 
 @pytest.fixture(scope="module")

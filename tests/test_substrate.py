@@ -1,20 +1,17 @@
 """Optimizer, data pipeline, checkpointing, fault tolerance."""
-import os
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.checkpoint import ckpt
 from repro.configs import tiny_config
-from repro.data.pipeline import DataConfig, batch_at, batch_for_model
+from repro.data.pipeline import DataConfig, batch_at
 from repro.configs.base import OptimConfig, TrainConfig, ShapeConfig
 from repro.distributed.fault_tolerance import (StragglerConfig,
                                                StragglerMonitor)
 from repro.models.api import build_model
-from repro.optim.adamw import (adamw_init, adamw_update, cosine_lr,
-                               clip_by_global_norm)
+from repro.optim.adamw import adamw_init, adamw_update, clip_by_global_norm
 from repro.training import steps as steps_lib
 from repro.training.loop import train
 
@@ -95,7 +92,7 @@ def test_train_restart_exact(tmp_path):
     tcfg = TrainConfig(optim=OptimConfig(lr=1e-3, total_steps=20),
                        checkpoint_dir=str(tmp_path), checkpoint_every=5,
                        log_every=100)
-    out1 = train(model, shape, tcfg, num_steps=10, log=lambda r: None)
+    train(model, shape, tcfg, num_steps=10, log=lambda r: None)
     out2 = train(model, shape, tcfg, num_steps=14, log=lambda r: None)
     # resumed run continues from step 10 (restored), history starts later
     assert out2["history"][0]["step"] >= 10
