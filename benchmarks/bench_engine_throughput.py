@@ -36,6 +36,16 @@ Four traces on the tiny CPU config:
     report teacher-forced max-abs logit drift (kvquant.greedy_drift) and
     the greedy token-match fraction against fp.
 
+  * **sharded** (the mixed shape served twice: 1-device vs an SPMD mesh —
+    model=2 plus whatever data axis the forced host devices allow): greedy
+    outputs are asserted token-identical (the sharded engine's acceptance
+    bar), decode tok/s is recorded for both (host-device collectives make
+    the sharded number a correctness trace, not a speedup, off-TPU), and
+    the roofline capacity story is captured from ``derive_policy``:
+    pool pages and resident sequences per device at 1 vs 2 model shards
+    (the >=1.9x floor the CI gate enforces). Skipped (with a note) when
+    fewer than 2 devices are visible — the multi-device CI job forces 8.
+
   * **longprompt** (a few short residents decoding for the whole run while
     long prompts keep a prefill in flight): served twice through the
     engine — whole-prompt buckets vs chunked prefill at a fixed chunk.
@@ -369,6 +379,69 @@ def bench_kv(model, params, cfg, n):
     return out
 
 
+def bench_sharded(model, params, cfg, n):
+    """1-device vs SPMD mesh on the mixed trace shape (same policy, same
+    trace, outputs asserted identical) + mesh-aware admission capacity."""
+    from repro.launch.mesh import make_serving_mesh
+
+    ndev = jax.device_count()
+    if ndev < 2:
+        print("# sharded: skipped (1 visible device; set XLA_FLAGS="
+              "--xla_force_host_platform_device_count=8)", flush=True)
+        return None
+    tp = 2                                   # tiny gemma2 has K=2
+    dp = max(min(ndev // tp, 4), 1)
+    mesh = make_serving_mesh(model=tp, data=dp)
+    reqs = make_trace(cfg, n, seed=TRACE_SEEDS["mixed"])
+    results = {}
+    out = {"n": n, "model_shards": tp, "data_shards": dp, "devices": ndev}
+    for mode, m in (("one_dev", None), ("sharded", mesh)):
+        policy = derive_policy(cfg, V5E_EDGE, max_model_len=96,
+                               param_bytes=model.param_bytes())
+        policy = dataclasses.replace(policy, max_batch=MAX_BATCH)
+        engine = Engine(model, params, policy, mesh=m)
+        outs, dt, stats = timed_run(engine, reqs, realtime=False)
+        tps = stats["decode_tokens"] / dt
+        results[mode] = outs
+        out[mode] = {"decode_tok_s": tps,
+                     "decode_ticks": stats["decode_ticks"]}
+        row(f"engine/sharded-{mode}",
+            dt / max(stats["decode_tokens"], 1) * 1e6,
+            f"decode_tok_s={tps:.1f};ticks={stats['decode_ticks']}")
+    identical = all(np.array_equal(results["one_dev"][r.rid],
+                                   results["sharded"][r.rid]) for r in reqs)
+    # recorded, not asserted: the CI gate (check_bench_regression.py
+    # sharded floors) owns the failure so a divergence still produces the
+    # JSON + comparison table instead of dying before --out is written
+    out["outputs_identical"] = identical
+    if not identical:
+        print("# sharded: WARNING — outputs diverged from the 1-device "
+              "engine (the bench gate will fail on this)", flush=True)
+
+    # roofline capacity: per-device pool pages + resident sequences at
+    # 1 vs 2 model shards in the same per-device HBM (the CI-gated floor)
+    p1 = derive_policy(cfg, V5E_EDGE, max_model_len=96,
+                       param_bytes=model.param_bytes())
+    p2 = derive_policy(cfg, V5E_EDGE, max_model_len=96,
+                       param_bytes=model.param_bytes(), mesh_model=2)
+    out["capacity"] = {
+        "pages_1shard": p1.num_pages, "pages_2shard": p2.num_pages,
+        "pages_scaling_2x": p2.num_pages / p1.num_pages,
+        "resident_1shard": p1.max_batch, "resident_2shard": p2.max_batch,
+    }
+    row("engine/sharded-capacity", out["capacity"]["pages_scaling_2x"],
+        f"pages={p1.num_pages}->{p2.num_pages};"
+        f"resident={p1.max_batch}->{p2.max_batch};target>=1.9x;"
+        f"pass={out['capacity']['pages_scaling_2x'] >= 1.9}")
+    print(f"# sharded: outputs identical on model={tp},data={dp}; "
+          f"{out['sharded']['decode_tok_s']:.1f} vs "
+          f"{out['one_dev']['decode_tok_s']:.1f} decode tok/s (host-device "
+          f"mesh); pool pages {p1.num_pages}->{p2.num_pages} per device at "
+          f"2 model shards "
+          f"({out['capacity']['pages_scaling_2x']:.2f}x)", flush=True)
+    return out
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=16,
@@ -380,6 +453,9 @@ def main():
     ap.add_argument("--long-requests", type=int, default=6,
                     help="long-prompt trace: number of long prompts "
                          "(0 skips the section)")
+    ap.add_argument("--sharded-requests", type=int, default=6,
+                    help="sharded trace size (0 skips; auto-skips with a "
+                         "note when <2 devices are visible)")
     ap.add_argument("--out", default="BENCH_engine.json",
                     help="machine-readable results file ('' disables)")
     # parse_known_args: benchmarks/run.py invokes main() with its own tag
@@ -409,6 +485,10 @@ def main():
     if args.long_requests:
         results["longprompt"] = bench_longprompt(model, params, cfg,
                                                  args.long_requests)
+    if args.sharded_requests:
+        sharded = bench_sharded(model, params, cfg, args.sharded_requests)
+        if sharded is not None:
+            results["sharded"] = sharded
     if args.out:
         with open(args.out, "w") as f:
             json.dump(results, f, indent=2, sort_keys=True)

@@ -19,6 +19,15 @@ same-machine runs, so they transfer across runner classes):
 * ``decode_tok_s_ratio >= 0.9`` — at no more than a 10% decode
   throughput cost.
 
+The sharded section (multi-device CI job) carries its own fresh-only
+invariants the same way:
+
+* ``outputs_identical == true`` — greedy outputs on the mesh must be
+  token-identical to the 1-device engine;
+* ``capacity.pages_scaling_2x >= 1.9`` — per-device pool capacity must
+  scale >= 1.9x from 1 to 2 model shards (the kv-head split really halves
+  per-device page bytes).
+
 Absolute tok/s values are machine-dependent: regenerate the committed
 baseline (``python -m benchmarks.bench_engine_throughput``) when the CI
 runner class changes, or tune ``--tolerance`` via the BENCH_GATE_TOL env
@@ -39,6 +48,7 @@ import sys
 
 STALL_REDUCTION_MIN = 2.0
 TOK_S_RATIO_MIN = 0.9
+SHARDED_PAGES_SCALING_MIN = 1.9
 
 
 def tok_s_leaves(node, path=()):
@@ -114,11 +124,44 @@ def check_longprompt(fresh):
     return rows, failures
 
 
+def check_sharded(fresh):
+    """Acceptance invariants of the sharded-engine section (fresh-only:
+    both are same-machine ratios/booleans, so they transfer across runner
+    classes)."""
+    rows = []
+    failures = []
+    section = fresh.get("sharded")
+    if not isinstance(section, dict):
+        return rows, failures
+    path = "sharded.outputs_identical"
+    ident = section.get("outputs_identical")
+    if ident is None:
+        rows.append((path, True, None, None, "SKIP (not recorded)"))
+    elif ident:
+        rows.append((path, True, True, None, "OK"))
+    else:
+        rows.append((path, True, False, None, "FAIL (diverged)"))
+        failures.append(
+            f"{path}: sharded engine diverged from the 1-device engine"
+        )
+    path = "sharded.capacity.pages_scaling_2x"
+    floor = SHARDED_PAGES_SCALING_MIN
+    scaling = (section.get("capacity") or {}).get("pages_scaling_2x")
+    if scaling is None:
+        rows.append((path, floor, None, None, "SKIP (not recorded)"))
+    elif scaling >= floor:
+        rows.append((path, floor, scaling, None, "OK"))
+    else:
+        rows.append((path, floor, scaling, None, f"FAIL (< {floor})"))
+        failures.append(f"{path}: {scaling:.2f} below the {floor} floor")
+    return rows, failures
+
+
 def _fmt(value):
     if value is None:
         return "-"
-    if isinstance(value, str):
-        return value
+    if isinstance(value, (str, bool)):
+        return str(value)
     return f"{value:.2f}"
 
 
@@ -174,6 +217,16 @@ def main():
         print("chunked-prefill acceptance (fresh run, machine-independent):")
         print_table(
             [(p, f, v, s) for p, f, v, _, s in lp_rows],
+            ("invariant", "floor", "value", "status"),
+        )
+
+    sh_rows, sh_failures = check_sharded(fresh)
+    failures.extend(sh_failures)
+    if sh_rows:
+        print()
+        print("sharded-engine acceptance (fresh run, machine-independent):")
+        print_table(
+            [(p, f, v, s) for p, f, v, _, s in sh_rows],
             ("invariant", "floor", "value", "status"),
         )
 

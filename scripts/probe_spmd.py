@@ -1,4 +1,5 @@
 import os
+
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 import time
 
@@ -21,10 +22,13 @@ def step(w, x):
 
 
 t0 = time.time()
-lowered = jax.jit(step, in_shardings=(
-    NamedSharding(mesh, P("data", "model")),
-    NamedSharding(mesh, P("data", None)),
-)).lower(W, X)
+lowered = jax.jit(
+    step,
+    in_shardings=(
+        NamedSharding(mesh, P("data", "model")),
+        NamedSharding(mesh, P("data", None)),
+    ),
+).lower(W, X)
 compiled = lowered.compile()
 print("compile_s", round(time.time() - t0, 2))
 ma = compiled.memory_analysis()

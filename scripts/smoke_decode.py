@@ -1,4 +1,5 @@
 """Dev smoke: prefill(S) + decode(1) logits == forward(S+1) last-position."""
+
 import sys
 
 import jax
@@ -11,20 +12,25 @@ B, S = 2, 48  # S > tiny window (32) to exercise the ring cache
 
 
 def main():
-    names = sys.argv[1:] or [n for n in ARCHS
-                             if n not in ("supernet-lm", "whisper-large-v3",
-                                          "llava-next-mistral-7b")]
+    names = sys.argv[1:] or [
+        n
+        for n in ARCHS
+        if n
+        not in ("supernet-lm", "whisper-large-v3", "llava-next-mistral-7b")
+    ]
     key = jax.random.PRNGKey(0)
     for name in names:
         cfg = tiny_config(name)
         model = build_model(cfg)
         params = model.init(jax.random.PRNGKey(3))
         toks = jax.random.randint(key, (B, S + 1), 0, cfg.vocab_size)
-        full_logits, _, _, _ = model.forward(params, {"tokens": toks},
-                                             want_cache=False)
+        full_logits, _, _, _ = model.forward(
+            params, {"tokens": toks}, want_cache=False
+        )
         want = full_logits[:, -1]
 
         _, cache = model.prefill(params, {"tokens": toks[:, :S]})
+
         # grow full-attention caches by 1 slot so decode can write at pos=S
         def grow(path, a):
             keystr = jax.tree_util.keystr(path)
@@ -33,14 +39,18 @@ def main():
                 pad[2] = (0, 1)
                 return jnp.pad(a, pad)
             return a
+
         cache = jax.tree_util.tree_map_with_path(grow, cache)
-        got, _ = model.decode_step(params, cache, toks[:, S:S + 1],
-                                   jnp.asarray(S, jnp.int32))
+        got, _ = model.decode_step(
+            params, cache, toks[:, S : S + 1], jnp.asarray(S, jnp.int32)
+        )
         got = got[:, 0]
         err = float(jnp.max(jnp.abs(want - got)))
         rel = err / (float(jnp.max(jnp.abs(want))) + 1e-9)
-        print(f"{name:28s} max_abs_err={err:.5f} rel={rel:.5f} "
-              f"{'OK' if rel < 2e-2 else 'FAIL'}")
+        print(
+            f"{name:28s} max_abs_err={err:.5f} rel={rel:.5f} "
+            f"{'OK' if rel < 2e-2 else 'FAIL'}"
+        )
         assert rel < 2e-2, name
 
 

@@ -1,4 +1,5 @@
 """Dev smoke: flash_attention == dense reference, fwd + grads."""
+
 import jax
 import jax.numpy as jnp
 
@@ -26,20 +27,27 @@ def main():
     v = jax.random.normal(kv, (B, S, K, hd), jnp.float32)
     do = jax.random.normal(kd, (B, S, H, hd), jnp.float32)
 
-    for kind, window, cap in [("global", 0, 0.0), ("local", 64, 0.0),
-                              ("bidir", 0, 0.0), ("global", 0, 20.0),
-                              ("local", 100, 30.0)]:
+    for kind, window, cap in [
+        ("global", 0, 0.0),
+        ("local", 64, 0.0),
+        ("bidir", 0, 0.0),
+        ("global", 0, 20.0),
+        ("local", 100, 30.0),
+    ]:
         f = lambda q, k, v: jnp.sum(
-            flash_attention(q, k, v, kind, window, cap, 64, 64) * do)
+            flash_attention(q, k, v, kind, window, cap, 64, 64) * do
+        )
         g = lambda q, k, v: jnp.sum(dense(q, k, v, kind, window, cap) * do)
         of, gf = jax.value_and_grad(f, argnums=(0, 1, 2))(q, k, v)
         od, gd = jax.value_and_grad(g, argnums=(0, 1, 2))(q, k, v)
         err_o = abs(float(of - od)) / (abs(float(od)) + 1e-9)
         errs = [float(jnp.max(jnp.abs(a - b))) for a, b in zip(gf, gd)]
         ok = err_o < 1e-3 and all(e < 1e-3 for e in errs)
-        print(f"{kind:8s} W={window:4d} cap={cap:5.1f} "
-              f"out_rel={err_o:.2e} dgrad_max={max(errs):.2e} "
-              f"{'OK' if ok else 'FAIL'}")
+        print(
+            f"{kind:8s} W={window:4d} cap={cap:5.1f} "
+            f"out_rel={err_o:.2e} dgrad_max={max(errs):.2e} "
+            f"{'OK' if ok else 'FAIL'}"
+        )
         assert ok
 
 

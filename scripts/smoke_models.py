@@ -1,4 +1,6 @@
-"""Dev smoke: tiny config of every arch — forward, loss+grad, prefill, decode."""
+"""Dev smoke: tiny config of every arch — forward, loss+grad, prefill,
+decode."""
+
 import sys
 
 import jax
@@ -15,19 +17,25 @@ def batch_for(model, cfg):
     if cfg.is_encdec:
         Sd = max(S // cfg.dec_ratio, 2)
         return {
-            "frames": jax.random.normal(key, (B, S, cfg.d_model), jnp.bfloat16),
+            "frames": jax.random.normal(
+                key, (B, S, cfg.d_model), jnp.bfloat16
+            ),
             "tokens": jnp.ones((B, Sd), jnp.int32),
             "labels": jnp.ones((B, Sd), jnp.int32),
         }
     if cfg.frontend == "vision_stub":
         Sp = int(S * cfg.patch_frac)
         return {
-            "patches": jax.random.normal(key, (B, Sp, cfg.d_model), jnp.bfloat16),
+            "patches": jax.random.normal(
+                key, (B, Sp, cfg.d_model), jnp.bfloat16
+            ),
             "tokens": jnp.ones((B, S - Sp), jnp.int32),
             "labels": jnp.ones((B, S - Sp), jnp.int32),
         }
-    return {"tokens": jnp.ones((B, S), jnp.int32),
-            "labels": jnp.ones((B, S), jnp.int32)}
+    return {
+        "tokens": jnp.ones((B, S), jnp.int32),
+        "labels": jnp.ones((B, S), jnp.int32),
+    }
 
 
 def main():
@@ -38,17 +46,28 @@ def main():
         params = model.init(jax.random.PRNGKey(0))
         batch = batch_for(model, cfg)
         loss, grads = jax.value_and_grad(model.loss)(params, batch)
-        gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
-                             for g in jax.tree.leaves(grads)))
+        gnorm = jnp.sqrt(
+            sum(
+                jnp.sum(jnp.square(g.astype(jnp.float32)))
+                for g in jax.tree.leaves(grads)
+            )
+        )
         logits, cache = model.prefill(params, batch)
         tok = jnp.ones((B, 1), jnp.int32)
-        lg2, cache2 = model.decode_step(params, cache, tok,
-                                        jnp.asarray(S, jnp.int32))
-        ok = (jnp.isfinite(loss) & jnp.isfinite(gnorm)
-              & jnp.all(jnp.isfinite(lg2)))
-        print(f"{name:28s} loss={float(loss):8.4f} gnorm={float(gnorm):10.4f} "
-              f"params={model.param_count():,} decode_logits={lg2.shape} "
-              f"{'OK' if bool(ok) else 'FAIL'}")
+        lg2, cache2 = model.decode_step(
+            params, cache, tok, jnp.asarray(S, jnp.int32)
+        )
+        ok = (
+            jnp.isfinite(loss)
+            & jnp.isfinite(gnorm)
+            & jnp.all(jnp.isfinite(lg2))
+        )
+        print(
+            f"{name:28s} loss={float(loss):8.4f} "
+            f"gnorm={float(gnorm):10.4f} "
+            f"params={model.param_count():,} decode_logits={lg2.shape} "
+            f"{'OK' if bool(ok) else 'FAIL'}"
+        )
         assert bool(ok), name
 
 

@@ -136,6 +136,37 @@ def attention_cost(batch: int, q_len: int, kv_len: int, n_heads: int,
                   act_bytes=jnp.asarray(kv_bytes + act))
 
 
+def allreduce_cost(tokens: int, d_model: int, shards: int) -> OpCost:
+    """Ring all-reduce of a (tokens, d_model) bf16 activation across a
+    tensor-parallel group: every rank moves ~2*(N-1)/N of the buffer over
+    ICI. This is the per-layer activation-collective term of
+    ``step_latency(mesh_model=N)`` for the sharded serving engine (its
+    gather-based exact TP moves the same activation volume as the
+    canonical Megatron pair) — the price of splitting the per-shard HBM
+    roofline N ways (paper Fig. 4's bandwidth axis traded against the
+    interconnect)."""
+    n = max(int(shards), 1)
+    coll = 2.0 * tokens * d_model * 2.0 * (n - 1) / n
+    return OpCost(flops=jnp.asarray(0.0),
+                  weight_bytes=jnp.asarray(0.0),
+                  act_bytes=jnp.asarray(0.0),
+                  coll_bytes=jnp.asarray(coll))
+
+
+def gather_cost(nbytes, shards: int) -> OpCost:
+    """Ring all-gather of ``nbytes`` of sharded-at-rest state onto every
+    rank ((N-1)/N of the buffer crosses ICI per rank): how the SPMD
+    serving engine pays for its FSDP-style gather-at-use weights (attn
+    out-projection, FFN down-projection, MoE expert bank, embed table) —
+    the contraction-sharded matmuls it deliberately refuses to psum-split
+    for bit-exactness (serving/engine/sharded.py)."""
+    n = max(int(shards), 1)
+    return OpCost(flops=jnp.asarray(0.0),
+                  weight_bytes=jnp.asarray(0.0),
+                  act_bytes=jnp.asarray(0.0),
+                  coll_bytes=jnp.asarray(float(nbytes) * (n - 1) / n))
+
+
 def ssd_cost(batch: int, seq: int, d_inner: int, d_state: int,
              chunk: int) -> OpCost:
     """Mamba2 SSD: intra-chunk quadratic + state updates."""

@@ -14,6 +14,7 @@ What runs where:
     largest valid (data', model) grid from the survivors, and the sharding
     rules (divisibility-aware) re-derive every spec for the new mesh.
 """
+
 from __future__ import annotations
 
 import dataclasses
@@ -29,9 +30,9 @@ from repro.distributed import sharding as shlib
 
 @dataclasses.dataclass
 class StragglerConfig:
-    window: int = 16          # trailing steps for the median
-    multiplier: float = 2.0   # deadline = multiplier x median
-    strikes: int = 3          # consecutive violations before eviction
+    window: int = 16  # trailing steps for the median
+    multiplier: float = 2.0  # deadline = multiplier x median
+    strikes: int = 3  # consecutive violations before eviction
 
 
 class StragglerMonitor:
@@ -39,8 +40,11 @@ class StragglerMonitor:
     cluster runner's evict-and-replace. Synchronous data-parallel training
     makes per-host timing visible as global step-time inflation."""
 
-    def __init__(self, cfg: StragglerConfig = StragglerConfig(),
-                 on_straggler: Optional[Callable[[dict], None]] = None):
+    def __init__(
+        self,
+        cfg: StragglerConfig = StragglerConfig(),
+        on_straggler: Optional[Callable[[dict], None]] = None,
+    ):
         self.cfg = cfg
         self.times: Deque[float] = deque(maxlen=cfg.window)
         self.strikes = 0
@@ -55,8 +59,12 @@ class StragglerMonitor:
             if dt > self.cfg.multiplier * med:
                 self.strikes += 1
                 breached = True
-                ev = {"step": step, "dt": dt, "median": med,
-                      "strikes": self.strikes}
+                ev = {
+                    "step": step,
+                    "dt": dt,
+                    "median": med,
+                    "strikes": self.strikes,
+                }
                 self.events.append(ev)
                 if self.strikes >= self.cfg.strikes and self.on_straggler:
                     self.on_straggler(ev)
@@ -77,8 +85,10 @@ def shrink_mesh(n_devices: int, model_axis: int):
     devs = jax.devices()[:usable]
     import numpy as _np
     from jax.sharding import Mesh
-    return Mesh(_np.asarray(devs).reshape(data, model_axis),
-                ("data", "model"))
+
+    return Mesh(
+        _np.asarray(devs).reshape(data, model_axis), ("data", "model")
+    )
 
 
 def reshard_state(state, model, tcfg, new_mesh):
@@ -86,9 +96,14 @@ def reshard_state(state, model, tcfg, new_mesh):
     Used after elastic shrink/grow; the divisibility-aware rules recompute
     legal specs (a batch no longer divisible falls back gracefully)."""
     from repro.training.steps import train_state_logical_specs
+
     specs = shlib.specs_for(
-        jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state),
-        train_state_logical_specs(model, tcfg), new_mesh)
+        jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state
+        ),
+        train_state_logical_specs(model, tcfg),
+        new_mesh,
+    )
     return jax.device_put(state, specs)
 
 

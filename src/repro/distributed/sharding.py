@@ -9,7 +9,13 @@ mesh-axes product and (b) no mesh axis is used twice within one tensor.
 This is what lets one fixed production mesh (16×16 / 2×16×16) serve all ten
 architectures: gemma2's 8 Q heads or granite's 49155 vocab simply fall through
 to the next candidate instead of failing to lower (see DESIGN.md §3).
+
+The SPMD serving engine (serving/engine/sharded.py) builds its shard_map
+specs from the same rules — ``kv_heads`` carries the paged KV pool there,
+and the invariants (no double-used axis, divisibility, replicate as the
+last resort) have direct property coverage in tests/test_distribution.py.
 """
+
 from __future__ import annotations
 
 from typing import Any, Dict, Optional, Sequence, Tuple
@@ -49,13 +55,16 @@ CANDIDATES: Dict[str, Sequence[Tuple[str, ...]]] = {
 }
 
 
-def _axes_in_mesh(mesh: Mesh, axes: Tuple[str, ...]) -> Optional[Tuple[str, ...]]:
+def _axes_in_mesh(
+    mesh: Mesh, axes: Tuple[str, ...]
+) -> Optional[Tuple[str, ...]]:
     present = tuple(a for a in axes if a in mesh.shape)
     return present or None
 
 
-def choose_spec(shape: Tuple[int, ...], logical: Tuple[Optional[str], ...],
-                mesh: Mesh) -> P:
+def choose_spec(
+    shape: Tuple[int, ...], logical: Tuple[Optional[str], ...], mesh: Mesh
+) -> P:
     assert len(shape) == len(logical), (shape, logical)
     used: set = set()
     out = []
@@ -131,28 +140,44 @@ def make_ac(mesh: Mesh, mode: str = "dp"):
         if ba is None:
             return x
         if kind == "resid" and x.ndim == 3:
-            if mode == "seq_tp" and model_ok \
-                    and x.shape[1] % mesh.shape["model"] == 0 \
-                    and x.shape[1] > 1:
+            if (
+                mode == "seq_tp"
+                and model_ok
+                and x.shape[1] % mesh.shape["model"] == 0
+                and x.shape[1] > 1
+            ):
                 return jax.lax.with_sharding_constraint(
-                    x, NamedSharding(mesh, P(ba, "model", None)))
+                    x, NamedSharding(mesh, P(ba, "model", None))
+                )
             return jax.lax.with_sharding_constraint(
-                x, NamedSharding(mesh, P(ba)))
+                x, NamedSharding(mesh, P(ba))
+            )
         # flash-decoding-style sequence-parallel decode attention: q tiny ->
         # replicated over model; kv/scores sharded over the cache-seq dim.
         # Without these hints XLA reshards the CACHE to match heads-sharded
         # q: an 80 GiB/token all-gather (EXPERIMENTS.md §Perf D2).
         if kind == "decode_q" and x.ndim == 4:
             return jax.lax.with_sharding_constraint(
-                x, NamedSharding(mesh, P(ba)))
-        if kind == "decode_kv" and x.ndim == 4 and model_ok \
-                and x.shape[1] % mesh.shape["model"] == 0:
+                x, NamedSharding(mesh, P(ba))
+            )
+        if (
+            kind == "decode_kv"
+            and x.ndim == 4
+            and model_ok
+            and x.shape[1] % mesh.shape["model"] == 0
+        ):
             return jax.lax.with_sharding_constraint(
-                x, NamedSharding(mesh, P(ba, "model")))
-        if kind == "decode_scores" and x.ndim == 4 and model_ok \
-                and x.shape[-1] % mesh.shape["model"] == 0:
+                x, NamedSharding(mesh, P(ba, "model"))
+            )
+        if (
+            kind == "decode_scores"
+            and x.ndim == 4
+            and model_ok
+            and x.shape[-1] % mesh.shape["model"] == 0
+        ):
             return jax.lax.with_sharding_constraint(
-                x, NamedSharding(mesh, P(ba, None, None, "model")))
+                x, NamedSharding(mesh, P(ba, None, None, "model"))
+            )
         return x
 
     return ac
@@ -163,8 +188,10 @@ def describe(shardings: Any, abstract: Any, limit: int = 0) -> str:
     lines = []
     flat_s = jax.tree.leaves(shardings)
     flat_a, _ = jax.tree.flatten(abstract)
-    paths = [jax.tree_util.keystr(p)
-             for p, _ in jax.tree_util.tree_flatten_with_path(abstract)[0]]
+    paths = [
+        jax.tree_util.keystr(p)
+        for p, _ in jax.tree_util.tree_flatten_with_path(abstract)[0]
+    ]
     for path, s, a in zip(paths, flat_s, flat_a):
         lines.append(f"{path:70s} {str(a.shape):28s} {s.spec}")
         if limit and len(lines) >= limit:

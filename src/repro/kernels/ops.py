@@ -104,6 +104,20 @@ def flash_attention(q, k, v, *, causal=True, window=0, cap=0.0,
                                   interpret=_interpret())
 
 
+def _paged_mode(mode: str) -> str:
+    """Resolve the paged-attention dispatch once for all four entry points:
+    "auto" lowers to the Pallas page-walk kernel on TPU and the pure-JAX
+    block walk elsewhere. The choice is backend-global and shape-free, so
+    the same dispatch works inside shard_map-partitioned programs — the
+    sharded engine (serving/engine/sharded.py) traces these walks per shard
+    with a local kv-head slice of the pool."""
+    if mode == "auto":
+        return "ref" if _interpret() else "pallas"
+    if mode not in ("ref", "pallas"):
+        raise ValueError(f"unknown paged-attention mode {mode!r}")
+    return mode
+
+
 def paged_attention(q, pool_k, pool_v, page_table, positions, *,
                     window=0, cap=0.0, mode: str = "auto") -> jax.Array:
     """Paged-attention decode: q (B,H,hd) against the page pool.
@@ -112,13 +126,9 @@ def paged_attention(q, pool_k, pool_v, page_table, positions, *,
     "pallas" forces the kernel (interpret mode off-TPU — slow, tests only);
     "ref" forces the block walk. Both walk pages and never materialize the
     dense chronological KV view."""
-    if mode == "auto":
-        mode = "ref" if _interpret() else "pallas"
-    if mode == "ref":
+    if _paged_mode(mode) == "ref":
         return ref.paged_attention_ref(q, pool_k, pool_v, page_table,
                                        positions, window=window, cap=cap)
-    if mode != "pallas":
-        raise ValueError(f"unknown paged-attention mode {mode!r}")
     return pa.paged_attention_fwd(q, pool_k, pool_v, page_table, positions,
                                   window=window, cap=cap,
                                   interpret=_interpret())
@@ -133,14 +143,10 @@ def paged_attention_quant(q, pool_k, k_scale, pool_v, v_scale, page_table,
     from the stored minor-dim size) with (P, page, K) fp32 scales. Same
     dispatch contract as paged_attention; every path dequantizes block-by-
     block inside the walk and never materializes a dense fp KV view."""
-    if mode == "auto":
-        mode = "ref" if _interpret() else "pallas"
-    if mode == "ref":
+    if _paged_mode(mode) == "ref":
         return ref.paged_attention_quant_ref(
             q, pool_k, k_scale, pool_v, v_scale, page_table, positions,
             window=window, cap=cap)
-    if mode != "pallas":
-        raise ValueError(f"unknown paged-attention mode {mode!r}")
     return pa.paged_attention_quant_fwd(
         q, pool_k, k_scale, pool_v, v_scale, page_table, positions,
         window=window, cap=cap, interpret=_interpret())
@@ -153,13 +159,9 @@ def paged_attention_prefill(q, pool_k, pool_v, page_table, positions, *,
     pool, causal at each query's absolute position (``positions`` holds the
     chunk-start offsets). Same dispatch contract as paged_attention; both
     paths walk pages and never materialize the dense prompt KV view."""
-    if mode == "auto":
-        mode = "ref" if _interpret() else "pallas"
-    if mode == "ref":
+    if _paged_mode(mode) == "ref":
         return ref.paged_prefill_ref(q, pool_k, pool_v, page_table,
                                      positions, window=window, cap=cap)
-    if mode != "pallas":
-        raise ValueError(f"unknown paged-attention mode {mode!r}")
     return pa.paged_prefill_fwd(q, pool_k, pool_v, page_table, positions,
                                 window=window, cap=cap,
                                 interpret=_interpret())
@@ -171,14 +173,10 @@ def paged_attention_prefill_quant(q, pool_k, k_scale, pool_v, v_scale,
     """Chunked-prefill attention over a quantized KV page pool (the chunk's
     K/V are already quantized on write); dequantization happens block-by-
     block inside the walk on every path."""
-    if mode == "auto":
-        mode = "ref" if _interpret() else "pallas"
-    if mode == "ref":
+    if _paged_mode(mode) == "ref":
         return ref.paged_prefill_quant_ref(
             q, pool_k, k_scale, pool_v, v_scale, page_table, positions,
             window=window, cap=cap)
-    if mode != "pallas":
-        raise ValueError(f"unknown paged-attention mode {mode!r}")
     return pa.paged_prefill_quant_fwd(
         q, pool_k, k_scale, pool_v, v_scale, page_table, positions,
         window=window, cap=cap, interpret=_interpret())

@@ -6,6 +6,8 @@ reference baseline for equivalence tests and throughput comparisons.
 ``python -m repro.launch.serve --arch gemma2-2b --tiny --sequential``
 ``python -m repro.launch.serve --arch gemma2-2b --tiny --kv-bits 8``
 ``python -m repro.launch.serve --arch gemma2-2b --tiny --kv-policy haq``
+``XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+  python -m repro.launch.serve --arch gemma2-2b --tiny --mesh model=2,data=4``
 """
 from __future__ import annotations
 
@@ -137,6 +139,19 @@ def _sample(logits, temperature, key):
         .astype(jnp.int32)
 
 
+def _parse_mesh(spec: str) -> Dict[str, int]:
+    """'model=2' / 'model=2,data=4' -> axis sizes (missing axes = 1)."""
+    sizes = {"model": 1, "data": 1}
+    for part in filter(None, spec.split(",")):
+        name, _, val = part.partition("=")
+        name = name.strip()
+        if name not in sizes or not val.strip().isdigit():
+            raise ValueError(
+                f"bad --mesh entry {part!r}; expected model=N[,data=M]")
+        sizes[name] = int(val)
+    return sizes
+
+
 def _make_requests(args, cfg):
     rng = np.random.default_rng(0)
     reqs = []
@@ -199,6 +214,14 @@ def main():
                          "baseline; 8/4 = serving/kvquant int pages with "
                          "per-token per-head scales, dequant fused into "
                          "the paged-attention walk)")
+    ap.add_argument("--mesh", default="",
+                    help="engine mode: SPMD serving over a device mesh, "
+                         "e.g. 'model=2' or 'model=2,data=4' — the paged "
+                         "pool shards kv_heads over the model axis, params "
+                         "spread at rest over the whole mesh, outputs stay "
+                         "token-identical to the 1-device engine (off-TPU "
+                         "set XLA_FLAGS=--xla_force_host_platform_device_"
+                         "count=N first)")
     ap.add_argument("--kv-policy", default="",
                     help="engine mode: per-layer KV bit policy — 'haq' "
                          "runs the HAQ search over KV sites "
@@ -216,6 +239,9 @@ def main():
     if args.sequential and (args.kv_policy or args.kv_bits != 16):
         ap.error("--kv-bits/--kv-policy apply to engine mode only; the "
                  "sequential baseline is the fp exactness reference")
+    if args.sequential and args.mesh:
+        ap.error("--mesh applies to engine mode only; the sequential "
+                 "baseline is the single-device exactness reference")
 
     cfg = tiny_config(args.arch) if args.tiny else get_config(args.arch)
     model = build_model(cfg)
@@ -265,11 +291,23 @@ def main():
         kv_bits = normalize_kv_bits(
             cfg, json.load(open(args.kv_policy)))
 
+    mesh = None
+    mesh_sizes = {"model": 1, "data": 1}
+    if args.mesh:
+        from repro.launch.mesh import make_serving_mesh
+        try:
+            mesh_sizes = _parse_mesh(args.mesh)
+            mesh = make_serving_mesh(**mesh_sizes)
+        except ValueError as e:
+            ap.error(str(e))
+
     policy = derive_policy(cfg, hw, max_model_len=max_len,
                            page_size=args.page_size,
                            expected_occupancy=occupancy,
                            param_bytes=model.param_bytes(),
-                           kv_bits=kv_bits)
+                           kv_bits=kv_bits,
+                           mesh_model=mesh_sizes["model"],
+                           mesh_data=mesh_sizes["data"])
     if args.max_batch or args.prefill_chunk:
         import dataclasses
         over = {}
@@ -284,11 +322,13 @@ def main():
           f"quant={policy.quant_bits}b "
           f"kv={policy.kv_bits or 'bf16'} pages={policy.num_pages} "
           f"page_size={policy.page_size} "
+          f"mesh=model:{policy.mesh_model},data:{policy.mesh_data} "
           f"(est decode {policy.est_decode_s * 1e3:.2f}ms/step)")
     engine = Engine(model, params, policy, temperature=args.temperature,
                     paged_kernel=args.paged_kernel,
                     reserve_upfront=args.reserve_upfront,
-                    chunked_prefill=not args.no_chunked_prefill)
+                    chunked_prefill=not args.no_chunked_prefill,
+                    mesh=mesh)
     reqs = _make_requests(args, cfg)
     t0 = time.time()
     outs = engine.run(reqs)

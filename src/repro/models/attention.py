@@ -217,8 +217,12 @@ def attention_decode_paged(p, x, pool_k, pool_v, page_table, positions,
     dense fp KV view is materialized on either path.
 
     ``ac`` (sequence-parallel decode hints) applies to the dense decode
-    path only; the paged walk is the single-host engine path and ignores it
-    (sharded paged decode is a ROADMAP item).
+    path only; the paged walk ignores it. Sharded paged decode instead
+    rides shard_map (serving/engine/sharded.py): the pool arrives as a
+    local kv-head slice and this function runs unchanged per shard — the
+    walk is embarrassingly parallel over heads, and the ``dot`` hook
+    (sharded.tp_dot) all-gathers the per-head outputs before the
+    out-projection so the contraction keeps its 1-device reduction order.
 
     Returns (out (B,1,D), pool_k, pool_v).
     """

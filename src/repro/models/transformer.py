@@ -610,6 +610,22 @@ def pool_specs(cfg, num_pages: int, page_size: int, kv_bits=None):
             for j in range(P)}
 
 
+def pool_axes(cfg, kv_bits=None):
+    """Logical-axis pytree matching ``pool_specs`` (for the SPMD serving
+    engine). ``kv_heads`` is the only mesh-mapped axis: the page and
+    page-slot dims stay unsharded because the paged-attention walk's online
+    softmax must keep its single-device reduction order (bit-exact serving),
+    and pages are the host allocator's unit — one logical page id covers
+    every shard's kv-head slice of that page. The dense decode path's
+    ``cache_seq`` fall-through (see distributed.sharding.CANDIDATES) does
+    not apply here for the same reason."""
+    kv = ("layer", None, None, "kv_heads", "head_dim")
+    scale = ("layer", None, None, "kv_heads")
+    return jax.tree.map(
+        lambda s: kv if s.ndim == 5 else scale,
+        pool_specs(cfg, 2, 2, kv_bits=kv_bits))
+
+
 # ------------------------------------------------------------ cache specs ----
 def cache_specs(cfg, batch: int, seq_len: int):
     """Abstract decode-cache pytree for dry-run lowering / allocation."""

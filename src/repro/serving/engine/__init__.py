@@ -102,13 +102,49 @@ wholly behind the window are released back to the allocator as decode
 advances (``Scheduler.trim_window``; freed slots ride along in the page
 table as scratch-page placeholders the walk never reads).
 
+SPMD serving (``Engine(mesh=...)``, serving/engine/sharded.py)
+--------------------------------------------------------------
+The engine runs over a ("data", "model") device mesh with every jitted
+tick (decode, chunk prefill, whole-prompt prefill, pool span-writer)
+shard_map'd. Per-device layout:
+
+    sharded over ``model`` (size N):
+        pool["sub{j}"]["k"|"v"]      (G, num_pages, page, K/N, hd)
+        quant pools: both the int codes and the fp32 scale tiles split
+        the same way — per-device page bytes really drop Nx, which is how
+        ``derive_policy(mesh_model=N)`` finds ~Nx the pool capacity (and
+        resident sequences) in the same per-device HBM
+        wq/wk/wv (heads dims), FFN up/gate (d_ff dim): used as local
+        slices — these matmuls are output-dim-sharded, so each device
+        computes an identical slice of the identical computation
+    sharded at rest, all-gathered at use (FSDP-style):
+        every other param (embed table, attn out-proj, FFN down-proj,
+        MoE experts, norms) — a contraction-sharded matmul would need a
+        partial-sum all-reduce, which is not bit-stable, so the inputs
+        are gathered (pure data movement) and the contraction runs whole
+    replicated (host-owned, never sharded):
+        page table, positions, tokens, logits — and ALL scheduler state:
+        admission, growth, preemption, window-trim, and chunk accounting
+        run on the host exactly as on one device; one logical page id
+        covers every shard's kv-head slice of that page
+
+The ``data`` axis is at-rest param FSDP only (batch-sharding the decode
+tick is the async-host-loop follow-on). Exactness contract: kv_heads must
+divide the model axis (page slots stay whole so the online softmax keeps
+its 1-device reduction order), and greedy outputs on any mesh are
+bit-identical to the 1-device engine across fp/int8/HAQ-mixed pools,
+chunked prefill, GQA, windows, and forced preemption — asserted in
+tests/test_sharded_engine.py and gated in CI (multi-device job +
+scripts/check_bench_regression.py sharded floors).
+
 Modules: `pool` (page allocator + device pool + bounded jit caches +
 span-capable prefill writer), `scheduler` (FIFO admission / growth /
 preemption / eviction / window-trim / prefill-progress bookkeeping),
 `admission` (roofline-derived policy, expected-footprint batch sizing,
-KV-bit-aware page sizing, per-tick chunk sizing), `engine` (the host loop
-tying them to the model); the KV quantization subsystem itself lives in
-`serving/kvquant`.
+KV-bit-aware page sizing, per-tick chunk sizing, mesh-aware per-shard
+sizing), `engine` (the host loop tying them to the model), `sharded`
+(the SPMD machinery above); the KV quantization subsystem itself lives
+in `serving/kvquant`.
 """
 from repro.serving.engine.admission import AdmissionPolicy, derive_policy
 from repro.serving.engine.engine import Engine

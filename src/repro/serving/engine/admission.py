@@ -49,6 +49,13 @@ class AdmissionPolicy:
     # stored KV-cache bits per sub-layer slot (serving/kvquant); None = bf16
     # pool. Cycled over layers like attn_pattern.
     kv_bits: Optional[Tuple[int, ...]] = None
+    # serving mesh the policy was sized for (engine/sharded.py): the pool
+    # shards kv_heads over `mesh_model` devices (per-device page bytes drop
+    # ~Nx, so num_pages rises ~Nx in the same per-device HBM) and params
+    # spread at rest over all mesh_model*mesh_data devices. 1/1 = the
+    # single-device engine.
+    mesh_model: int = 1
+    mesh_data: int = 1
 
     @property
     def pages_per_seq(self) -> int:
@@ -82,44 +89,79 @@ def kv_bytes_per_token(cfg, kv_bits=None) -> int:
     return total
 
 
-def _ffn_latency(cfg, i: int, tokens: int, hw, tp: int, w_bits) -> float:
+def _ffn_terms(cfg, i: int, tokens: int, hw, tp: int, w_bits):
+    """FFN latency split into the part the sharded engine partitions over
+    the model axis (up/gate projections — output-dim sharded) and the part
+    that runs WHOLE on every device (the down-projection; the entire
+    expert bank for MoE, whose weights are gathered at use), plus the
+    at-rest weight bytes that gather costs. Their sum reproduces the
+    single-device FFN latency exactly."""
     if cfg.is_moe_layer(i):
         m = cfg.moe
-        return float(hwm.moe_cost(tokens, cfg.d_model, m.d_ff_expert,
-                                  m.num_experts, m.experts_per_token)
-                     .latency(hw, w_bits=w_bits))
-    return float(3.0 * hwm.linear_cost(tokens, cfg.d_model, cfg.d_ff, tp=tp)
-                 .latency(hw, w_bits=w_bits))
+        mc = hwm.moe_cost(tokens, cfg.d_model, m.d_ff_expert,
+                          m.num_experts, m.experts_per_token)
+        return 0.0, float(mc.latency(hw, w_bits=w_bits)), \
+            float(mc.weight_bytes) * w_bits / 16.0
+    lin = hwm.linear_cost(tokens, cfg.d_model, cfg.d_ff, tp=tp)
+    lat = float(lin.latency(hw, w_bits=w_bits))
+    return 2.0 * lat, lat, float(lin.weight_bytes) * w_bits / 16.0
 
 
 def step_latency(cfg, batch: int, q_len: int, ctx: int, hw: hwm.Hardware,
-                 *, w_bits: int = 16, kv_bits=None) -> float:
+                 *, w_bits: int = 16, kv_bits=None,
+                 mesh_model: int = 1) -> float:
     """Roofline latency of one forward step (q_len=1 -> decode tick).
 
     ``kv_bits`` (int or per-sub-layer tuple) prices the KV-cache reads at
     the pool's stored precision — the direct hardware feedback the kvquant
     HAQ search optimizes against. It applies to decode only: prefill
-    attends its own fp activations before the pool write quantizes them."""
+    attends its own fp activations before the pool write quantizes them.
+
+    ``mesh_model`` prices the sharded engine FAITHFULLY to what
+    engine/sharded.py runs per device: only the output-dim-sharded work
+    splits N ways (q/k/v projections, the paged-attention walk — the
+    decode-dominant KV reads — and the FFN up/gate projections); the
+    contraction matmuls it refuses to psum-split for bit-exactness (attn
+    out-projection, FFN down-projection, the MoE expert bank, unembed)
+    run WHOLE on every device, and each layer additionally pays two
+    residual-sized activation collectives (``hwm.allreduce_cost``) plus
+    the ring all-gather of its at-rest-sharded weights
+    (``hwm.gather_cost`` — the dominant ICI term for decode, which is why
+    gather-based exact TP trades latency for capacity)."""
     d, hd = cfg.d_model, cfg.resolved_head_dim
     H, K = cfg.num_heads, cfg.num_kv_heads
     tp = min(hw.chips, 16)
+    shards = max(int(mesh_model), 1)
     tokens = batch * q_len
     decode = q_len == 1
     t = 0.0
     for i in range(cfg.num_layers):
         kind = cfg.attn_pattern[i % len(cfg.attn_pattern)]
         window = cfg.window_size if kind == "local" else 0
-        t += float(hwm.linear_cost(tokens, d, (H + 2 * K) * hd, tp=tp)
-                   .latency(hw, w_bits=w_bits))
-        t += float(hwm.attention_cost(
+        split = float(hwm.linear_cost(tokens, d, (H + 2 * K) * hd, tp=tp)
+                      .latency(hw, w_bits=w_bits))
+        split += float(hwm.attention_cost(
             batch, q_len, ctx, H, K, hd, window=window, decode=decode,
             kv_bits=_kv_bits_for_layer(kv_bits, i) if decode else 16)
             .latency(hw))
-        t += float(hwm.linear_cost(tokens, H * hd, d, tp=tp)
-                   .latency(hw, w_bits=w_bits))
-        t += _ffn_latency(cfg, i, tokens, hw, tp, w_bits)
-    t += float(hwm.linear_cost(tokens, d, cfg.padded_vocab, tp=tp)
-               .latency(hw, w_bits=w_bits))
+        out_proj = hwm.linear_cost(tokens, H * hd, d, tp=tp)
+        whole = float(out_proj.latency(hw, w_bits=w_bits))
+        f_split, f_whole, f_gather = _ffn_terms(cfg, i, tokens, hw, tp,
+                                                w_bits)
+        split += f_split
+        whole += f_whole
+        t += split / shards + whole
+        if shards > 1:
+            t += 2.0 * float(hwm.allreduce_cost(tokens, d, shards)
+                             .latency(hw))
+            gather = float(out_proj.weight_bytes) * w_bits / 16.0 + f_gather
+            t += float(hwm.gather_cost(gather, shards).latency(hw))
+    unembed = hwm.linear_cost(tokens, d, cfg.padded_vocab, tp=tp)
+    t += float(unembed.latency(hw, w_bits=w_bits))
+    if shards > 1:
+        t += float(hwm.gather_cost(
+            float(unembed.weight_bytes) * w_bits / 16.0, shards)
+            .latency(hw))
     return t
 
 
@@ -130,7 +172,8 @@ def derive_policy(cfg, hw: hwm.Hardware, *, max_model_len: int,
                   max_batch_cap: int = 1024,
                   expected_occupancy: float = 0.5,
                   param_bytes: Optional[int] = None,
-                  kv_bits=None) -> AdmissionPolicy:
+                  kv_bits=None, mesh_model: int = 1,
+                  mesh_data: int = 1) -> AdmissionPolicy:
     """Pick (num_pages, max_batch, prefill_chunk, quant_bits) for a target.
 
     ``param_bytes`` defaults to the analytic bf16 weight footprint
@@ -149,34 +192,51 @@ def derive_policy(cfg, hw: hwm.Hardware, *, max_model_len: int,
     shrinks per-token KV bytes, so the same HBM budget holds 2-4x the
     pages and the expected-footprint batch grows with it; the decode-SLO
     search prices KV reads at the quantized width.
+
+    ``mesh_model``/``mesh_data`` size for the SPMD engine (one hw target
+    per mesh device): the whole roofline is priced **per shard**. Params
+    live at rest spread across all ``mesh_model * mesh_data`` devices, and
+    the pool's kv-head split divides per-device page bytes by
+    ``mesh_model`` — so pool capacity (``num_pages``, and with it the
+    expected-footprint resident-sequence count) rises ~Nx along the model
+    axis while the decode-SLO search pays the per-layer all-reduce term
+    (``step_latency(mesh_model=)``). 1/1 reproduces the single-device
+    policy exactly.
     """
     if not 0.0 < expected_occupancy <= 1.0:
         raise ValueError(f"expected_occupancy must be in (0, 1], "
                          f"got {expected_occupancy}")
+    if mesh_model < 1 or mesh_data < 1:
+        raise ValueError(f"mesh axes must be >= 1, got "
+                         f"model={mesh_model} data={mesh_data}")
     if cfg.is_encdec or cfg.family not in ("dense", "moe", "vlm"):
         raise NotImplementedError(
             f"admission policy sizes attention KV pools; {cfg.name} "
             f"(family={cfg.family!r}) is an open item (ROADMAP)")
     if param_bytes is None:
         param_bytes = cfg.param_count() * 2
+    devices = mesh_model * mesh_data
+    # per-shard HBM: each mesh device is one hw target; params at rest are
+    # spread across every device (TP dims local + FSDP over data), the pool
+    # replicates over data and splits kv_heads over model.
     hbm_total = hw.hbm_bytes * hw.chips * hbm_util
     per_tok = kv_bytes_per_token(cfg, kv_bits)
-    one_seq_kv = per_tok * max_model_len
+    one_seq_kv = per_tok * max_model_len / mesh_model
 
     # HAQ escalation: shrink weights until weights + one sequence fit.
     quant_bits = 16
     for bits in (16, 8, 4):
-        if param_bytes * bits / 16.0 + one_seq_kv <= hbm_total:
+        if param_bytes * bits / 16.0 / devices + one_seq_kv <= hbm_total:
             quant_bits = bits
             break
     else:
         raise ValueError(
-            f"{cfg.name} cannot fit on {hw.name}: weights at 4-bit plus one "
-            f"{max_model_len}-token sequence exceed "
-            f"{hbm_total / 2**30:.1f} GiB")
+            f"{cfg.name} cannot fit on {hw.name} x{devices}: weights at "
+            f"4-bit plus one {max_model_len}-token sequence exceed "
+            f"{hbm_total / 2**30:.1f} GiB per device")
 
-    kv_budget = hbm_total - param_bytes * quant_bits / 16.0
-    page_bytes = page_size * per_tok
+    kv_budget = hbm_total - param_bytes * quant_bits / 16.0 / devices
+    page_bytes = page_size * per_tok / mesh_model   # per-shard page slice
     pages_per_seq = -(-max_model_len // page_size)
     # floor at one full sequence: the quant check above guarantees weights +
     # one_seq_kv fit, but page-granular rounding could otherwise leave the
@@ -192,20 +252,21 @@ def derive_policy(cfg, hw: hwm.Hardware, *, max_model_len: int,
     # Decode-latency roofline: largest batch meeting the SLO (monotonic).
     lo, hi = 1, max(min(mem_batch, max_batch_cap), 1)
     if step_latency(cfg, hi, 1, max_model_len, hw, w_bits=quant_bits,
-                    kv_bits=kv_bits) <= decode_slo_s:
+                    kv_bits=kv_bits, mesh_model=mesh_model) <= decode_slo_s:
         max_batch = hi
     else:
         while hi - lo > 1:
             mid = (lo + hi) // 2
             if step_latency(cfg, mid, 1, max_model_len, hw,
-                            w_bits=quant_bits,
-                            kv_bits=kv_bits) <= decode_slo_s:
+                            w_bits=quant_bits, kv_bits=kv_bits,
+                            mesh_model=mesh_model) <= decode_slo_s:
                 lo = mid
             else:
                 hi = mid
         max_batch = lo
     est_decode = step_latency(cfg, max_batch, 1, max_model_len, hw,
-                              w_bits=quant_bits, kv_bits=kv_bits)
+                              w_bits=quant_bits, kv_bits=kv_bits,
+                              mesh_model=mesh_model)
 
     # Prefill chunk: largest power-of-two chunk whose prefill-with-cache
     # forward — priced at the worst-case resident context, since a late
@@ -218,12 +279,12 @@ def derive_policy(cfg, hw: hwm.Hardware, *, max_model_len: int,
     c = 16
     while c * 2 <= max_model_len:
         c *= 2
-        if step_latency(cfg, 1, c, max_model_len, hw,
-                        w_bits=quant_bits) > stall_budget:
+        if step_latency(cfg, 1, c, max_model_len, hw, w_bits=quant_bits,
+                        mesh_model=mesh_model) > stall_budget:
             break
         chunk = c
     est_prefill = step_latency(cfg, 1, chunk, max_model_len, hw,
-                               w_bits=quant_bits)
+                               w_bits=quant_bits, mesh_model=mesh_model)
 
     if kv_bits is not None and isinstance(kv_bits, int):
         kv_bits = (kv_bits,)
@@ -232,4 +293,4 @@ def derive_policy(cfg, hw: hwm.Hardware, *, max_model_len: int,
         num_pages=num_pages, max_batch=max_batch, prefill_chunk=chunk,
         quant_bits=quant_bits, decode_slo_s=decode_slo_s,
         est_decode_s=est_decode, est_prefill_s=est_prefill,
-        kv_bits=kv_bits)
+        kv_bits=kv_bits, mesh_model=mesh_model, mesh_data=mesh_data)

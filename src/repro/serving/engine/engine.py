@@ -80,7 +80,7 @@ class Engine:
     def __init__(self, model, params, policy: AdmissionPolicy, *,
                  temperature: float = 0.0, seed: int = 0, dot=None,
                  paged_kernel: str = "auto", reserve_upfront: bool = False,
-                 chunked_prefill: bool = True):
+                 chunked_prefill: bool = True, mesh=None):
         cfg = model.cfg
         if cfg.is_encdec or cfg.family not in ("dense", "moe") \
                 or cfg.frontend != "none":
@@ -93,6 +93,11 @@ class Engine:
         self.temperature = temperature
         self._key = jax.random.PRNGKey(seed) if temperature > 0 else None
 
+        if mesh is not None and policy.quant_bits < 16:
+            raise NotImplementedError(
+                "sharded engine with HAQ weight quantization: quantized "
+                "weight dicts have no logical specs yet (ROADMAP); use "
+                "kv_bits for sharded memory savings")
         if policy.quant_bits < 16:
             params = squant.quantize_params(
                 params, default_bits=policy.quant_bits)
@@ -109,8 +114,20 @@ class Engine:
         num_pages = max(min(policy.num_pages, needed),
                         policy.pages_per_seq + 1)
         self.kv_bits = normalize_kv_bits(cfg, policy.kv_bits)
+        # SPMD serving (serving/engine/sharded.py): params and the paged
+        # pool sharded over the mesh, decode/prefill/writer jits shard_map'd,
+        # the host-side scheduler/page-table state untouched. The unsharded
+        # engine stays the token-exact baseline the sharded one is asserted
+        # bit-identical to.
+        self.mesh = mesh
+        spmd = None
+        if mesh is not None:
+            from repro.serving.engine import sharded
+            spmd = sharded.SpmdEngine(model, mesh, kv_bits=self.kv_bits,
+                                      kernel=paged_kernel, dot=dot)
+            params = self.params = spmd.shard_params(params)
         self.kv = PagedKVPool(model, num_pages, policy.page_size,
-                              kv_bits=self.kv_bits)
+                              kv_bits=self.kv_bits, spmd=spmd)
         self.scheduler = Scheduler(self.kv.allocator, policy.max_batch,
                                    policy.max_model_len,
                                    reserve_upfront=reserve_upfront)
@@ -127,42 +144,46 @@ class Engine:
         # jit once: fixed (max_batch, pages_per_seq) shapes for decode;
         # prefill compiles per padding bucket (LRU below). The pool is
         # donated so decode ticks update it in place instead of double-
-        # buffering it.
-        self._decode = jax.jit(
-            lambda p, pool, pt, tok, pos: model.decode_step_paged(
-                p, pool, pt, tok, pos, dot=dot, kernel=paged_kernel),
-            donate_argnums=(1,))
-
-        def prefill_fn(p, toks, last_idx):
+        # buffering it. Under a mesh every closure is the shard_map'd twin
+        # with the identical signature, so the host loop never branches.
+        def prefill_body(p, toks, last_idx, dot_):
             # unembed only the last real prompt position — the prompt is
             # padded to the bucket, so a full (B, Sp, V) unembed would be
             # bucket/1 overcompute per admission.
             hidden, cache, _, _ = model.forward(
                 p, {"tokens": toks}, want_cache=True, unembed_mode="none",
-                cache_layout="full", dot=dot)
+                cache_layout="full", dot=dot_)
             h = jnp.take_along_axis(hidden, last_idx.reshape(1, 1, 1),
                                     axis=1)
-            return model.unembed(p, h, dot=dot), cache
+            return model.unembed(p, h, dot=dot_), cache
 
         # one jit instance per padding bucket, bounded: evicting an entry
         # drops its compiled executable (a single shared jax.jit would keep
         # every bucket's trace alive for the engine's lifetime).
         self._prefill_jits = JitLRU(self.PREFILL_JIT_CAP)
-        self._make_prefill = lambda: jax.jit(prefill_fn)
-
-        # chunked prefill (default): ONE fixed-shape jit — (1, chunk)
-        # tokens against the full-width page table, pool donated like
-        # decode — instead of a per-bucket cache; the chunk writes its K/V
-        # into the sequence's pages and attends over the pool itself.
         self.chunked = chunked_prefill
-        self._chunk_prefill = jax.jit(
-            lambda p, pool, pt, toks, pos: model.prefill_chunk_paged(
-                p, pool, pt, toks, pos, dot=dot, kernel=paged_kernel),
-            donate_argnums=(1,))
-        self._unembed_row = jax.jit(
-            lambda p, h, idx: model.unembed(
-                p, jnp.take_along_axis(h, idx.reshape(1, 1, 1), axis=1),
-                dot=dot))
+        if spmd is None:
+            self._decode = jax.jit(
+                lambda p, pool, pt, tok, pos: model.decode_step_paged(
+                    p, pool, pt, tok, pos, dot=dot, kernel=paged_kernel),
+                donate_argnums=(1,))
+            self._make_prefill = lambda: jax.jit(
+                lambda p, t, i: prefill_body(p, t, i, dot))
+            self._chunk_prefill = jax.jit(
+                lambda p, pool, pt, toks, pos: model.prefill_chunk_paged(
+                    p, pool, pt, toks, pos, dot=dot, kernel=paged_kernel),
+                donate_argnums=(1,))
+            self._unembed_row = jax.jit(
+                lambda p, h, idx: model.unembed(
+                    p, jnp.take_along_axis(h, idx.reshape(1, 1, 1), axis=1),
+                    dot=dot))
+        else:
+            self._decode = spmd.jit_decode()
+            self._make_prefill = lambda: spmd.make_prefill(
+                lambda p, t, i: prefill_body(spmd.gathered(p), t, i,
+                                             spmd.dot))
+            self._chunk_prefill = spmd.jit_prefill_chunk()
+            self._unembed_row = spmd.jit_unembed_row()
         self.stats = {"decode_ticks": 0, "decode_tokens": 0,
                       "prefills": 0, "prefill_chunks": 0, "admitted": 0,
                       "preemptions": 0, "grown_pages": 0,

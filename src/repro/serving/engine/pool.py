@@ -118,11 +118,19 @@ class PagedKVPool:
     WRITE_JIT_CAP = 8   # LRU cap on per-(n_pages, cache_len) writer jits
 
     def __init__(self, model, num_pages: int, page_size: int, *,
-                 kv_bits=None):
+                 kv_bits=None, spmd=None):
         self.allocator = PageAllocator(num_pages, page_size)
         self.page_size = page_size
         self.kv_bits = kv_bits
         self.pool = model.init_pool(num_pages, page_size, kv_bits=kv_bits)
+        # SPMD serving (engine/sharded.py): the pool lives sharded on
+        # kv_heads over the mesh's model axis (every device holds a
+        # 1/N-head slice of every page) and the span writer becomes its
+        # shard_map twin — page ids stay host/replicated, the scatter is
+        # shard-local.
+        self._spmd = spmd
+        if spmd is not None:
+            self.pool = jax.device_put(self.pool, spmd.pool_shardings())
         self._write_jit = JitLRU(self.WRITE_JIT_CAP)
 
     @property
@@ -183,6 +191,8 @@ class PagedKVPool:
                 return jax.tree.map(
                     wr, pool, cache,
                     is_leaf=lambda x: isinstance(x, dict) and "q" in x)
+            if self._spmd is not None:
+                return self._spmd.jit_pool_writer(write, cache)
             return jax.jit(write, donate_argnums=(0,))
 
         fn = self._write_jit.get((n, Sp), make)

@@ -21,6 +21,12 @@ baseline.
 
 Head-of-line FIFO: if the front request doesn't fit, we wait for an
 eviction rather than skip it (starvation-free).
+
+Under the SPMD engine (serving/engine/sharded.py) every bit of this state
+— queue, slots, page lists, births, prefill progress — stays host-side and
+device-count-agnostic: a physical page id names the same logical page on
+every shard (each holds a 1/N kv-head slice of it), so admission, growth,
+preemption, window-trim, and chunk accounting run unchanged on any mesh.
 """
 from __future__ import annotations
 

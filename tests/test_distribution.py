@@ -106,6 +106,124 @@ def test_shrink_mesh():
     assert m.shape["model"] == 1
 
 
+# ----------------------------------------- choose_spec/specs_for direct --
+# (previously only exercised via launch/dryrun.py; the sharded serving
+# engine now builds its shard_map specs from these rules, so the
+# invariants get their own property coverage.)
+
+def test_specs_for_structure_and_replication():
+    """specs_for mirrors the abstract pytree, honors None logical entries
+    (fully replicated), and returns NamedShardings on the given mesh."""
+    mesh = Mesh(np.asarray(jax.devices()[:1]).reshape(1, 1),
+                ("data", "model"))
+    abstract = {
+        "a": jax.ShapeDtypeStruct((8, 4), jnp.float32),
+        "nest": {"b": jax.ShapeDtypeStruct((2, 2, 2), jnp.bfloat16)},
+    }
+    logical = {"a": ("vocab", "embed"), "nest": {"b": None}}
+    specs = shlib.specs_for(abstract, logical, mesh)
+    assert set(specs) == {"a", "nest"}
+    assert specs["nest"]["b"].spec == P()
+    for s in jax.tree.leaves(
+            specs, is_leaf=lambda x: hasattr(x, "spec")):
+        assert s.mesh.shape == mesh.shape
+    # a 1-sized mesh axis always divides: both dims place
+    assert specs["a"].spec == P("model", "data")
+
+
+def _spec_axes(entry):
+    if entry is None:
+        return ()
+    return entry if isinstance(entry, tuple) else (entry,)
+
+
+_LOGICAL = sorted(shlib.CANDIDATES) + [None]
+_DIMS = [1, 2, 3, 4, 6, 8, 12, 16, 48, 49]
+
+
+def check_choose_spec_invariants(shape, logical, mesh):
+    """For one (shape, logical axes, mesh): (a) no mesh axis is used twice
+    within one tensor — divisibility fall-through included; (b) every
+    placement divides its dim by the mesh-axes product; (c) replicate
+    really is the last resort: a dim is left None only when every
+    candidate is absent, already used (by an earlier dim — the walk is
+    left-to-right), or non-dividing."""
+    spec = shlib.choose_spec(shape, logical, mesh)
+    entries = tuple(spec) + (None,) * (len(shape) - len(spec))
+
+    used = []
+    for e in entries:
+        used.extend(_spec_axes(e))
+    assert len(used) == len(set(used)), (shape, logical, spec)
+
+    taken: set = set()
+    for dim, name, e in zip(shape, logical, entries):
+        placed = _spec_axes(e)
+        if placed:
+            size = int(np.prod([mesh.shape[a] for a in placed]))
+            assert dim % size == 0, (shape, logical, spec)
+        else:
+            for cand in shlib.CANDIDATES.get(name or "", []):
+                present = tuple(a for a in cand if a in mesh.shape)
+                if not present:
+                    continue
+                if any(a in taken for a in present):
+                    continue
+                size = int(np.prod([mesh.shape[a] for a in present]))
+                assert dim % size != 0, (
+                    f"dim {dim} ({name}) replicated although {present} "
+                    f"was free and divides: {shape} {logical} {spec}")
+        taken.update(placed)
+
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=200, deadline=None)
+    @given(data=st.data(),
+           ndim=st.integers(1, 4),
+           pod=st.sampled_from([0, 2]),
+           dsize=st.sampled_from([1, 2, 3, 4, 16]),
+           msize=st.sampled_from([1, 2, 3, 4, 16]))
+    def test_choose_spec_invariants(data, ndim, pod, dsize, msize):
+        axes = {"data": dsize, "model": msize}
+        if pod:
+            axes["pod"] = pod
+        shape = tuple(data.draw(st.sampled_from(_DIMS), label=f"dim{i}")
+                      for i in range(ndim))
+        logical = tuple(data.draw(st.sampled_from(_LOGICAL),
+                                  label=f"log{i}") for i in range(ndim))
+        check_choose_spec_invariants(shape, logical, FakeMesh(**axes))
+
+    test_choose_spec_invariants.__doc__ = \
+        check_choose_spec_invariants.__doc__
+else:                        # loud skip, same as the -ra convention
+    @pytest.mark.skip(reason="optional dep: property test needs hypothesis")
+    def test_choose_spec_invariants():
+        pass
+
+
+def test_choose_spec_invariants_seeded_fuzz():
+    """Hypothesis-free fallback sweep of the same invariants (runs
+    everywhere, including environments without the optional dep)."""
+    rng = np.random.default_rng(0)
+    for _ in range(300):
+        axes = {"data": int(rng.choice([1, 2, 3, 4, 16])),
+                "model": int(rng.choice([1, 2, 3, 4, 16]))}
+        if rng.integers(2):
+            axes["pod"] = 2
+        ndim = int(rng.integers(1, 5))
+        shape = tuple(int(rng.choice(_DIMS)) for _ in range(ndim))
+        logical = tuple(
+            _LOGICAL[int(rng.integers(len(_LOGICAL)))]
+            for _ in range(ndim))
+        check_choose_spec_invariants(shape, logical, FakeMesh(**axes))
+
+
 def test_sharded_train_step_runs_on_host_mesh():
     """End-to-end pjit train step on a (n,1) host mesh (1 device in CI)."""
     from repro.configs import tiny_config
