@@ -56,6 +56,15 @@ Four traces on the tiny CPU config:
     tok/s (±10%) — the acceptance bar the CI bench-gate re-checks from
     the JSON.
 
+The chunked long-prompt engine additionally contributes a ``telemetry``
+section: measured per-decode-tick stall p50/p99 from the telemetry
+record, per-kind tick counts, and the roofline predicted-vs-measured
+calibration (`serving/telemetry/calibrate.py`) — the scale factors and
+relative error that say how far `core/hardware_model`'s roofline is
+from this host. ``--trace-out`` dumps the same engine's full tick trace
+and request spans as Chrome trace-event JSON (Perfetto-loadable); the
+CI engine-smoke job uploads it as a workflow artifact.
+
 Engines are warmed on the exact trace shapes and re-timed on the same
 instance, so jit compiles are excluded. Outputs are asserted identical
 between the two admission modes (and to the sequential baseline on the
@@ -86,6 +95,7 @@ from repro.models.api import build_model
 from repro.serving.engine import Engine, Request, derive_policy
 from repro.serving.engine.admission import kv_bytes_per_token
 from repro.serving.kvquant import greedy_drift, search_kv_policy
+from repro.serving.telemetry import calibrate, write_chrome_trace
 
 ARCH = "gemma2-2b"
 MAX_BATCH = 8          # CPU-host cap on the policy's in-flight batch
@@ -257,6 +267,42 @@ def _pct(xs, q):
     return float(np.percentile(np.asarray(xs, np.float64), q)) if xs else 0.0
 
 
+def telemetry_section(engine, n):
+    """The ``telemetry`` block of BENCH_engine.json, read off the chunked
+    long-prompt engine (the trace with all three tick kinds in flight):
+    measured stall percentiles from the telemetry record and the roofline
+    predicted-vs-measured calibration per tick kind — the scale factors
+    and relative error `telemetry.calibrate` fits for hardware_model."""
+    tel = engine.telemetry
+    m = tel.metrics
+    report = calibrate(tel.ticks)
+    stall_ms = [s * 1e3 for s in tel.stall_log_view()]
+    sec = {
+        "n": n,
+        "ticks": {k: c.value for k, c in sorted(m.counters.items())
+                  if k.startswith("ticks.")},
+        "stall_p50_ms": _pct(stall_ms, 50),
+        "stall_p99_ms": _pct(stall_ms, 99),
+        "pool_min_free": m.gauge("pool.min_free").value,
+        "roofline_scale": report.scale_factors(),
+        "roofline_rel_err": report.rel_err_by_kind(),
+    }
+    scale = sec["roofline_scale"]
+    rel = sec["roofline_rel_err"]
+    row("engine/telemetry-calibration",
+        sum(v for v in rel.values() if v is not None),
+        ";".join(f"{k}:scale="
+                 + ("-" if scale[k] is None else f"{scale[k]:.2f}")
+                 + ",relerr="
+                 + ("-" if rel[k] is None else f"{rel[k]:.2f}")
+                 for k in sorted(scale)))
+    print(f"# telemetry: {len(tel.ticks)} tick events, stall p99 "
+          f"{sec['stall_p99_ms']:.1f}ms; roofline scale "
+          + ", ".join(f"{k}={scale[k]:.2f}" for k in sorted(scale)
+                      if scale[k] is not None), flush=True)
+    return sec
+
+
 def bench_longprompt(model, params, cfg, n):
     """Whole-prompt vs chunked prefill on the long-prompt trace: decode
     tok/s, per-decode-tick stall p50/p99 (engine.stall_log), and TTFT.
@@ -271,10 +317,13 @@ def bench_longprompt(model, params, cfg, n):
     reqs = make_long_trace(cfg, n, seed=TRACE_SEEDS["long"])
     out = {"n": n, "prompt_len": LONG_PROMPT_LEN, "chunk": LONG_CHUNK}
     results = {}
+    chunked_engine = None
     for mode, chunk in (("whole", LONG_MAX_LEN), ("chunked", LONG_CHUNK)):
         engine = build_engine(model, params, max_model_len=LONG_MAX_LEN,
                               max_batch=LONG_RESIDENTS + 1,
                               prefill_chunk=chunk)
+        if mode == "chunked":
+            chunked_engine = engine
         outs, dt, stats = timed_run(engine, reqs, realtime=False)
         stall_ms = [s * 1e3 for s in engine.stall_log]
         ttft_ms = [t * 1e3 for t in engine.first_token_s.values()]
@@ -311,7 +360,7 @@ def bench_longprompt(model, params, cfg, n):
           f"{out['chunked']['stall_p99_ms']:.1f}ms vs whole-prompt "
           f"{out['whole']['stall_p99_ms']:.1f}ms ({red:.2f}x lower) at "
           f"{ratio:.2f}x decode tok/s (outputs identical)", flush=True)
-    return out
+    return out, chunked_engine
 
 
 def _equal_budget_pages(cfg, kv_bits, page_size=16):
@@ -458,6 +507,10 @@ def main():
                          "note when <2 devices are visible)")
     ap.add_argument("--out", default="BENCH_engine.json",
                     help="machine-readable results file ('' disables)")
+    ap.add_argument("--trace-out", default="",
+                    help="write the chunked long-prompt engine's telemetry "
+                         "as Chrome trace-event JSON to this path (open in "
+                         "Perfetto; '' disables)")
     # parse_known_args: benchmarks/run.py invokes main() with its own tag
     # arguments still on sys.argv
     args, _ = ap.parse_known_args()
@@ -483,8 +536,15 @@ def main():
     if args.kv_requests:
         results["kv"] = bench_kv(model, params, cfg, args.kv_requests)
     if args.long_requests:
-        results["longprompt"] = bench_longprompt(model, params, cfg,
+        longprompt, chunked_engine = bench_longprompt(model, params, cfg,
+                                                      args.long_requests)
+        results["longprompt"] = longprompt
+        results["telemetry"] = telemetry_section(chunked_engine,
                                                  args.long_requests)
+        if args.trace_out:
+            write_chrome_trace(chunked_engine.telemetry, args.trace_out)
+            print(f"# wrote Chrome trace {args.trace_out} "
+                  f"(open in https://ui.perfetto.dev)", flush=True)
     if args.sharded_requests:
         sharded = bench_sharded(model, params, cfg, args.sharded_requests)
         if sharded is not None:

@@ -28,6 +28,13 @@ invariants the same way:
   scale >= 1.9x from 1 to 2 model shards (the kv-head split really halves
   per-device page bytes).
 
+Before any comparison both files are **schema-validated**: a bench doc
+must carry a ``schema`` version, a non-empty ``config.trace_seeds`` list
+(the seeds the traces were drawn from — a doc without them is not
+reproducible), and no NaN/Inf anywhere in its numeric leaves (a NaN
+tok/s would sail through every ``delta < -tolerance`` comparison as a
+silent pass). Validation failures exit 1 before the gate runs.
+
 Absolute tok/s values are machine-dependent: regenerate the committed
 baseline (``python -m benchmarks.bench_engine_throughput``) when the CI
 runner class changes, or tune ``--tolerance`` via the BENCH_GATE_TOL env
@@ -49,6 +56,42 @@ import sys
 STALL_REDUCTION_MIN = 2.0
 TOK_S_RATIO_MIN = 0.9
 SHARDED_PAGES_SCALING_MIN = 1.9
+
+
+def numeric_leaves(node, path=()):
+    """Yield (dotted_path, value) for EVERY numeric leaf (bools excluded)."""
+    if isinstance(node, dict):
+        for key in sorted(node):
+            yield from numeric_leaves(node[key], path + (str(key),))
+    elif isinstance(node, list):
+        for i, item in enumerate(node):
+            yield from numeric_leaves(item, path + (str(i),))
+    elif isinstance(node, (int, float)) and not isinstance(node, bool):
+        yield ".".join(path), float(node)
+
+
+def validate_schema(doc, name="doc"):
+    """Structural sanity of one bench document; returns a list of problem
+    strings (empty = valid). Checked before any comparison: a NaN leaf
+    would pass every ``delta < -tolerance`` check silently, and a doc
+    without its trace seeds is not reproducible."""
+    problems = []
+    if not isinstance(doc, dict):
+        return [f"{name}: not a JSON object"]
+    if "schema" not in doc:
+        problems.append(f"{name}: missing 'schema' version key")
+    seeds = (doc.get("config") or {}).get("trace_seeds") \
+        if isinstance(doc.get("config"), dict) else None
+    if not seeds or not isinstance(seeds, (dict, list)):
+        problems.append(
+            f"{name}: missing or empty config.trace_seeds "
+            "(bench traces must record their seeds)")
+    for path, value in numeric_leaves(doc):
+        if value != value:                       # NaN
+            problems.append(f"{name}: NaN at {path}")
+        elif value in (float("inf"), float("-inf")):
+            problems.append(f"{name}: non-finite value at {path}")
+    return problems
 
 
 def tok_s_leaves(node, path=()):
@@ -195,6 +238,13 @@ def main():
         baseline = json.load(fh)
     with open(args.fresh) as fh:
         fresh = json.load(fh)
+
+    problems = validate_schema(baseline, "baseline") \
+        + validate_schema(fresh, "fresh")
+    if problems:
+        for problem in problems:
+            print(f"SCHEMA: {problem}")
+        return 1
 
     rows, failures = compare(baseline, fresh, args.tolerance)
     table = [

@@ -222,6 +222,11 @@ def main():
                          "token-identical to the 1-device engine (off-TPU "
                          "set XLA_FLAGS=--xla_force_host_platform_device_"
                          "count=N first)")
+    ap.add_argument("--trace-out", default="",
+                    help="engine mode: write the telemetry tick trace + "
+                         "request spans as Chrome trace-event JSON to this "
+                         "path (open in Perfetto / chrome://tracing) and "
+                         "print the telemetry summary")
     ap.add_argument("--kv-policy", default="",
                     help="engine mode: per-layer KV bit policy — 'haq' "
                          "runs the HAQ search over KV sites "
@@ -242,6 +247,9 @@ def main():
     if args.sequential and args.mesh:
         ap.error("--mesh applies to engine mode only; the sequential "
                  "baseline is the single-device exactness reference")
+    if args.sequential and args.trace_out:
+        ap.error("--trace-out applies to engine mode only; the sequential "
+                 "baseline has no telemetry recorder")
 
     cfg = tiny_config(args.arch) if args.tiny else get_config(args.arch)
     model = build_model(cfg)
@@ -342,6 +350,12 @@ def main():
           f"{engine.stats['grown_pages']} pages grown)")
     first = outs[0]
     print("sample:", first[len(reqs[0].prompt):len(reqs[0].prompt) + 16])
+    if args.trace_out:
+        from repro.serving.telemetry import summarize, write_chrome_trace
+        write_chrome_trace(engine.telemetry, args.trace_out)
+        print(f"telemetry: wrote Chrome trace to {args.trace_out} "
+              f"(open in https://ui.perfetto.dev)")
+        print(summarize(engine.telemetry))
 
 
 if __name__ == "__main__":

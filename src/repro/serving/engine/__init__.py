@@ -137,6 +137,56 @@ chunked prefill, GQA, windows, and forced preemption — asserted in
 tests/test_sharded_engine.py and gated in CI (multi-device job +
 scripts/check_bench_regression.py sharded floors).
 
+Observability (serving/telemetry)
+---------------------------------
+Every engine owns a `Telemetry` recorder (in-memory, jax-free, no-op
+export sink by default — the disabled path costs a few dataclass appends
+per tick, and greedy outputs are untouched). Two event streams:
+
+**Tick events** — one per jitted dispatch, ``kind`` in {``prefill``,
+``chunk``, ``decode``}::
+
+    TickEvent(kind, step, t_start, measured_s, predicted_s,
+              batch, padded_batch, q_len, tokens, rids, admitted,
+              preempted, pages_allocated/freed/trimmed,
+              queue_depth, pool_free, pool_allocated, tags)
+
+``measured_s`` is fenced wall clock (the engine blocks on the dispatch's
+outputs before stopping the timer, so async jit dispatch is never billed
+as compute); ``predicted_s`` is the ``admission.step_latency`` roofline
+for the same shape, priced at the *padded* jit batch. Page counters are
+deltas since the previous tick event. Under a mesh, ``tags`` carries the
+shard layout (``mesh_model``/``mesh_data``/``mesh_devices``).
+
+**Sequence spans** — per-rid lifecycle edges, scheduler-owned on the
+queue side and engine-owned on the compute side::
+
+    enqueue -> admit -> chunk* -> first_token
+            -> (preempt -> requeue -> admit -> ...)* -> finish -> release
+
+Spans yield real TTFT / queue-wait / stall; ``Engine.stall_log`` and
+``Engine.first_token_s`` survive as thin views over them (a preempted
+request keeps its first served token's TTFT).
+
+The metrics registry (``engine.telemetry.metrics``) rolls both streams
+into counters/gauges/histograms: ``ticks.*``, ``tokens.*``,
+``pool.free`` (min = low-water mark), ``pool.occupancy`` /
+``.fragmentation``, ``queue.depth``, ``preemptions``,
+``jit.*.hits/misses/cache_size`` (steady-state decode must not
+retrace), ``tick.*.measured_s`` / ``.rel_err`` histograms.
+
+Exports: ``telemetry.write_chrome_trace(engine.telemetry, path)`` emits
+Chrome trace-event JSON — open it at https://ui.perfetto.dev (or
+chrome://tracing): tick slices by kind on the engine track, pool/queue
+counter tracks, one async span per request. ``--trace-out`` on
+launch/serve.py and benchmarks/bench_engine_throughput.py does this
+from the CLI (the CI engine-smoke job uploads the bench's trace as an
+artifact). ``telemetry.summarize`` prints a text rollup, and
+``telemetry.calibrate(engine.telemetry.ticks)`` fits measured vs
+predicted per (kind, batch, q_len) — the per-kind scale factors
+`core/hardware_model`'s roofline needs to match this host, feeding the
+ROADMAP's serving-stack autotuner.
+
 Modules: `pool` (page allocator + device pool + bounded jit caches +
 span-capable prefill writer), `scheduler` (FIFO admission / growth /
 preemption / eviction / window-trim / prefill-progress bookkeeping),

@@ -165,6 +165,46 @@ def step_latency(cfg, batch: int, q_len: int, ctx: int, hw: hwm.Hardware,
     return t
 
 
+class RooflinePredictor:
+    """Memoized per-(kind, batch, q_len) roofline tick predictions for the
+    telemetry layer (serving/telemetry): every engine tick event carries
+    the `step_latency` prediction for its exact dispatch shape next to
+    the measured wall clock, and `telemetry.calibrate` fits the two.
+
+    Predictions price what the jit actually runs — the *padded* batch
+    (idle decode slots ride along) at worst-case resident context, with
+    the policy's weight bits, KV bit policy (decode only, matching
+    `step_latency`), and mesh split. The memo makes the per-tick cost a
+    dict lookup: decode always hits one key, chunk prefill one more, and
+    whole-prompt prefill one per padding bucket.
+
+    Hand-built policies (tests) may name a hardware target that is not in
+    ``HARDWARES``; prediction is then 0.0 — "no prediction" — which
+    calibration and the Chrome trace both represent explicitly rather
+    than inventing a number."""
+
+    def __init__(self, cfg, policy: AdmissionPolicy):
+        self.cfg = cfg
+        self.policy = policy
+        self.hw = hwm.HARDWARES.get(policy.hw_name)
+        self._memo: dict = {}
+
+    def __call__(self, kind: str, batch: int, q_len: int) -> float:
+        key = (kind, batch, q_len)
+        got = self._memo.get(key)
+        if got is None:
+            p = self.policy
+            if self.hw is None:
+                got = 0.0
+            else:
+                got = float(step_latency(
+                    self.cfg, batch, q_len, p.max_model_len, self.hw,
+                    w_bits=p.quant_bits, kv_bits=p.kv_bits,
+                    mesh_model=p.mesh_model))
+            self._memo[key] = got
+        return got
+
+
 def derive_policy(cfg, hw: hwm.Hardware, *, max_model_len: int,
                   page_size: int = 16, decode_slo_s: float = 0.030,
                   prefill_stall_factor: float = 4.0,

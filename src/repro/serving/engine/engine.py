@@ -43,11 +43,21 @@ baseline. On all-local-attention models, pages wholly behind the sliding
 window are released back to the allocator each tick
 (scheduler.trim_window).
 
-Observability: ``stall_log`` records, per decode tick, the seconds its
-already-ready sequences waited on prefill work that step (the per-tick
-stall ``prefill_stall_factor`` budgets); ``first_token_s`` records each
-request's time-to-first-token. Both feed the long-prompt section of
-benchmarks/bench_engine_throughput.py.
+Observability (serving/telemetry): every jitted dispatch — whole-prompt
+prefill, prompt chunk, batched decode — emits a typed ``TickEvent``
+into the engine's ``Telemetry`` recorder, carrying the *measured* wall
+clock (fenced: the engine blocks on the dispatch's outputs before the
+timer stops, so async jit dispatch is never billed as compute) next to
+the ``admission.step_latency`` roofline *prediction* for the same
+dispatch shape; request lifecycles (enqueue/admit/chunk/first_token/
+preempt/requeue/finish/release) are recorded as per-rid spans, half by
+the scheduler and half by this loop. ``stall_log`` (measured per-decode-
+tick prefill stall seconds — the quantity ``prefill_stall_factor``
+budgets, with the roofline's predicted stall recorded alongside in
+``telemetry.stalls``) and ``first_token_s`` (per-request TTFT) survive
+as thin views over that record; both feed the long-prompt section of
+benchmarks/bench_engine_throughput.py, and ``telemetry.calibrate``
+turns the tick trace into per-kind roofline scale factors.
 """
 from __future__ import annotations
 
@@ -59,9 +69,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.transformer import normalize_kv_bits, sublayer_kinds
-from repro.serving.engine.admission import AdmissionPolicy
+from repro.serving.engine.admission import AdmissionPolicy, \
+    RooflinePredictor
 from repro.serving.engine.pool import JitLRU, PagedKVPool, quiet_donation
 from repro.serving.engine.scheduler import ActiveSeq, Request, Scheduler
+from repro.serving.telemetry import Telemetry, TickEvent
 from repro.serving import quant as squant
 
 
@@ -80,7 +92,8 @@ class Engine:
     def __init__(self, model, params, policy: AdmissionPolicy, *,
                  temperature: float = 0.0, seed: int = 0, dot=None,
                  paged_kernel: str = "auto", reserve_upfront: bool = False,
-                 chunked_prefill: bool = True, mesh=None):
+                 chunked_prefill: bool = True, mesh=None,
+                 telemetry: Optional[Telemetry] = None):
         cfg = model.cfg
         if cfg.is_encdec or cfg.family not in ("dense", "moe") \
                 or cfg.frontend != "none":
@@ -92,6 +105,14 @@ class Engine:
         self.policy = policy
         self.temperature = temperature
         self._key = jax.random.PRNGKey(seed) if temperature > 0 else None
+        # telemetry recorder (serving/telemetry): tick trace, sequence
+        # spans, metrics. The default instance records in memory with a
+        # no-op sink — cheap enough to leave on; pass your own Telemetry
+        # (custom sink / clock) to stream or capture events.
+        self.telemetry = telemetry if telemetry is not None else Telemetry()
+        # roofline predictions per dispatch shape, memoized (telemetry
+        # pairs them with measured wall clock on every tick event)
+        self._predict = RooflinePredictor(cfg, policy)
 
         if mesh is not None and policy.quant_bits < 16:
             raise NotImplementedError(
@@ -130,7 +151,10 @@ class Engine:
                               kv_bits=self.kv_bits, spmd=spmd)
         self.scheduler = Scheduler(self.kv.allocator, policy.max_batch,
                                    policy.max_model_len,
-                                   reserve_upfront=reserve_upfront)
+                                   reserve_upfront=reserve_upfront,
+                                   telemetry=self.telemetry)
+        # mesh tags stamped on every tick event (engine/sharded.py)
+        self._tags = spmd.event_tags() if spmd is not None else {}
         # Window-trim page freeing (ROADMAP): pages are shared across
         # layers, so blocks behind the sliding window can only be released
         # when EVERY layer is local — one global layer pins the history.
@@ -189,28 +213,55 @@ class Engine:
                       "preemptions": 0, "grown_pages": 0,
                       "trimmed_pages": 0}
         self._outputs: Dict[int, np.ndarray] = {}
-        # observability for the long-prompt bench: per-decode-tick stall
-        # (prefill seconds the tick waited on this step) and per-request
-        # time-to-first-token, both relative to the trace clock started by
-        # run() (or the first step() if driven manually).
-        self.stall_log: List[float] = []
-        self.first_token_s: Dict[int, float] = {}
-        self._t0: Optional[float] = None
+        # per-step telemetry bookkeeping: step index, admissions this
+        # step, and the marks tick events difference page/preemption
+        # counters against (each event reports deltas since the previous
+        # event, so admission-time allocations land on the step's first
+        # tick and growth/preempt frees on the decode tick that caused
+        # them).
+        self._step_idx = 0
+        self._step_admitted = 0
+        self._alloc_mark = self._free_mark = 0
+        self._trim_mark = self._preempt_mark = 0
+
+    # --------------------------------------------------- telemetry views --
+    @property
+    def stall_log(self) -> List[float]:
+        """Measured per-decode-tick prefill stall seconds — the exact
+        pre-telemetry list, as a view over ``telemetry.stalls`` (each
+        record also carries the roofline's *predicted* stall for the
+        same chunks; this view is measurement only)."""
+        return self.telemetry.stall_log_view()
+
+    @property
+    def first_token_s(self) -> Dict[int, float]:
+        """rid -> time-to-first-token seconds (trace clock), as a view
+        over the telemetry spans; a preempted request keeps the
+        timestamp of the first token it was actually served."""
+        return self.telemetry.first_token_view()
 
     # ------------------------------------------------------------- intake --
     def submit(self, req: Request) -> None:
         self.scheduler.submit(req)
 
     def reset_stats(self) -> None:
-        """Zero the counters and drop held outputs (benchmarks re-time a
-        warmed engine instance so jit compiles stay out of the clock)."""
+        """Zero the counters, telemetry, and held outputs (benchmarks
+        re-time a warmed engine instance so jit compiles stay out of the
+        clock). Allocator lifetime counters are not zeroed (pool state
+        persists) — the delta marks re-anchor on them instead, and the
+        free-page low-water mark restarts at the current free count."""
         for k in self.stats:
             self.stats[k] = 0
         self.scheduler.num_preempted = 0
         self._outputs.clear()
-        self.stall_log.clear()
-        self.first_token_s.clear()
-        self._t0 = None
+        self.telemetry.reset()
+        self._step_idx = 0
+        self._step_admitted = 0
+        alloc = self.kv.allocator
+        self._alloc_mark = alloc.total_allocated
+        self._free_mark = alloc.total_freed
+        self._trim_mark = self._preempt_mark = 0
+        alloc.min_free = alloc.num_free
 
     # --------------------------------------------------------------- step --
     def step(self, now: float = float("inf")) -> List[int]:
@@ -222,20 +273,23 @@ class Engine:
         moment they finish — before the decode tick's growth phase — so
         their pages backfill growth instead of tempting the preemption
         picker."""
-        if self._t0 is None:
-            self._t0 = time.monotonic()
+        self.telemetry.start_clock()
+        self._step_idx += 1
+        self._step_admitted = 0
         out: List[int] = []
         ready_before = len(self.scheduler.decode_ready())
+        stall_pred = 0.0
         t_prefill = time.monotonic()
         for seq in self.scheduler.admit(now):
             self.stats["admitted"] += 1
+            self._step_admitted += 1
             if not self.chunked:
-                self._run_prefill(seq)
+                stall_pred += self._run_prefill(seq)
                 if seq.is_done():
                     out.append(self._finish(seq))
         if self.chunked:
             for seq in self.scheduler.prefill_pending():
-                self._run_prefill_chunk(seq)
+                stall_pred += self._run_prefill_chunk(seq)
                 if seq.prefill_done and seq.is_done():
                     out.append(self._finish(seq))
         t_prefill = time.monotonic() - t_prefill
@@ -247,13 +301,78 @@ class Engine:
             if self.stats["decode_ticks"] > ticks_before and ready_before:
                 # per-decode-tick stall: seconds this tick's already-ready
                 # sequences waited on prefill work (0.0 when none ran) —
-                # the quantity prefill_stall_factor budgets per tick.
-                self.stall_log.append(t_prefill)
+                # the quantity prefill_stall_factor budgets per tick,
+                # recorded next to the roofline's prediction for the same
+                # prefill work so calibration sees both sides.
+                self.telemetry.stall(t_prefill, stall_pred)
             for seq in finished:
                 out.append(self._finish(seq))
+        self._update_gauges()
         return out
 
+    # ---------------------------------------------------- telemetry emit --
+    def _tick_deltas(self) -> Dict[str, int]:
+        """Page/preemption deltas since the previous tick event (marks
+        advance here, so each event owns exactly its own deltas)."""
+        a = self.kv.allocator
+        trimmed = self.stats["trimmed_pages"]
+        preempted = self.scheduler.num_preempted
+        d = {"pages_allocated": a.total_allocated - self._alloc_mark,
+             "pages_freed": a.total_freed - self._free_mark,
+             "pages_trimmed": trimmed - self._trim_mark,
+             "preempted": preempted - self._preempt_mark}
+        self._alloc_mark = a.total_allocated
+        self._free_mark = a.total_freed
+        self._trim_mark = trimmed
+        self._preempt_mark = preempted
+        return d
+
+    def _emit_tick(self, kind: str, t_start: float, measured_s: float,
+                   predicted_s: float, *, batch: int, padded_batch: int,
+                   q_len: int, tokens: int, rids) -> None:
+        a = self.kv.allocator
+        self.telemetry.tick(TickEvent(
+            kind=kind, step=self._step_idx, t_start=t_start,
+            measured_s=measured_s, predicted_s=predicted_s, batch=batch,
+            padded_batch=padded_batch, q_len=q_len, tokens=tokens,
+            rids=tuple(rids), admitted=self._step_admitted,
+            queue_depth=self.scheduler.num_queued, pool_free=a.num_free,
+            pool_allocated=a.num_allocated, tags=self._tags,
+            **self._tick_deltas()))
+
+    def _update_gauges(self) -> None:
+        """Per-step gauges that aren't per-tick deltas: pool occupancy /
+        fragmentation (token-granular — allocated pages may be mostly
+        empty while sequences are young) and the jit-cache hit/miss
+        counters (satellite: JitLRU observability — steady-state decode
+        must not retrace)."""
+        m = self.telemetry.metrics
+        a = self.kv.allocator
+        page = a.page_size
+        used = 0
+        for seq in self.scheduler.active.values():
+            live_pages = sum(p != 0 for p in seq.pages)
+            trimmed = len(seq.pages) - live_pages
+            used += max(min(seq.pos - trimmed * page, live_pages * page), 0)
+        cap = a.num_allocated * page
+        occ = used / cap if cap else 0.0
+        m.gauge("pool.occupancy").set(occ)
+        m.gauge("pool.fragmentation").set(1.0 - occ if cap else 0.0)
+        m.gauge("pool.min_free").set(a.min_free)
+        m.gauge("jit.prefill.hits").set(self._prefill_jits.hits)
+        m.gauge("jit.prefill.misses").set(self._prefill_jits.misses)
+        m.gauge("jit.pool_writer.hits").set(self.kv._write_jit.hits)
+        m.gauge("jit.pool_writer.misses").set(self.kv._write_jit.misses)
+        # the once-jitted closures: retrace count straight from jax (a
+        # steady-state engine holds these at 1)
+        for name, fn in (("decode", self._decode),
+                         ("chunk", self._chunk_prefill)):
+            size = getattr(fn, "_cache_size", lambda: -1)()
+            m.gauge(f"jit.{name}.cache_size").set(size)
+
     def _finish(self, seq: ActiveSeq) -> int:
+        self.telemetry.seq_event(seq.req.rid, "finish",
+                                 generated=len(seq.generated))
         self.scheduler.release(seq)
         self._outputs[seq.req.rid] = np.concatenate(
             [np.asarray(seq.req.prompt, np.int32),
@@ -268,37 +387,48 @@ class Engine:
         seq.generated.append(tok)
         seq.pos = len(seq.req.prompt)
         self.stats["prefills"] += 1
-        # setdefault: a preempted sequence re-prefills its prompt-extension
-        # later, but its first token was already served — TTFT keeps the
-        # original timestamp.
-        self.first_token_s.setdefault(seq.req.rid,
-                                      time.monotonic() - self._t0)
+        # a preempted sequence re-prefills its prompt-extension later and
+        # emits another first_token edge, but TTFT views take the FIRST
+        # edge — the request's first token was already served.
+        self.telemetry.seq_event(seq.req.rid, "first_token", token=tok)
 
-    def _run_prefill(self, seq: ActiveSeq) -> None:
+    def _run_prefill(self, seq: ActiveSeq) -> float:
         """Whole-prompt prefill (chunked_prefill=False): one forward over
         the prompt padded to the policy's bucket, scattered into the
         sequence's pages afterwards. One long prompt stalls every resident
         decode for its full prefill latency — kept as the pre-chunking
-        baseline the bench compares against."""
+        baseline the bench compares against. Returns the roofline's
+        predicted seconds for the dispatch (the step's stall budget)."""
         prompt = np.asarray(seq.req.prompt, np.int32)
         S = len(prompt)
         chunk = self.policy.prefill_chunk
         Sp = -(-S // chunk) * chunk
         toks = np.zeros((1, Sp), np.int32)
         toks[0, :S] = prompt
+        t_start = time.monotonic()
         prefill = self._prefill_jits.get(Sp, self._make_prefill)
         logits, cache = prefill(self.params, jnp.asarray(toks),
                                 jnp.asarray(S - 1, jnp.int32))
         self.kv.write_prefill(cache, seq.pages)
+        # fence: the writer donated the pool, so blocking on (logits, pool)
+        # covers the whole admission dispatch before the timer stops
+        jax.block_until_ready((logits, self.kv.pool))
+        pred = self._predict("prefill", 1, Sp)
+        self._emit_tick("prefill", t_start, time.monotonic() - t_start,
+                        pred, batch=1, padded_batch=1, q_len=Sp, tokens=S,
+                        rids=(seq.req.rid,))
         seq.prefill_progress = S
         self._first_token(seq, np.asarray(logits[0, 0]))
+        return pred
 
-    def _run_prefill_chunk(self, seq: ActiveSeq) -> None:
+    def _run_prefill_chunk(self, seq: ActiveSeq) -> float:
         """One prompt chunk through the prefill-with-cache forward: the
         chunk's K/V land in the sequence's pages and its attention walks
         the pool (resident prefix + chunk). The final chunk unembeds the
         last real prompt row and samples the first generated token; until
-        then the sequence stays out of the decode batch."""
+        then the sequence stays out of the decode batch. Returns the
+        roofline's predicted seconds for the chunk (the step's stall
+        budget accumulates these)."""
         prompt = np.asarray(seq.req.prompt, np.int32)
         S = len(prompt)
         C = self.policy.prefill_chunk
@@ -309,6 +439,7 @@ class Engine:
         maxp = self.policy.pages_per_seq
         pt = np.zeros((1, maxp), np.int32)
         pt[0, :len(seq.pages)] = seq.pages
+        t_start = time.monotonic()
         with quiet_donation():
             hidden, self.kv.pool = self._chunk_prefill(
                 self.params, self.kv.pool, jnp.asarray(pt),
@@ -317,6 +448,11 @@ class Engine:
         # an unblocked intermediate chunk would bill its compute to the
         # decode tick instead of the stall it actually causes.
         jax.block_until_ready(hidden)
+        pred = self._predict("chunk", 1, C)
+        self._emit_tick("chunk", t_start, time.monotonic() - t_start,
+                        pred, batch=1, padded_batch=1, q_len=C,
+                        tokens=end - start, rids=(seq.req.rid,))
+        self.telemetry.seq_event(seq.req.rid, "chunk", start=start, end=end)
         seq.prefill_progress = end
         seq.pos = end
         self.stats["prefill_chunks"] += 1
@@ -324,6 +460,7 @@ class Engine:
             logits = self._unembed_row(self.params, hidden,
                                        jnp.asarray(S - 1 - start, jnp.int32))
             self._first_token(seq, np.asarray(logits[0, 0]))
+        return pred
 
     def _is_live(self, seq: ActiveSeq) -> bool:
         return self.scheduler.active.get(seq.slot) is seq
@@ -374,11 +511,22 @@ class Engine:
             tokens[seq.slot, 0] = seq.last_token
             positions[seq.slot] = seq.pos
             pt[seq.slot, :len(seq.pages)] = seq.pages
+        t_start = time.monotonic()
         with quiet_donation():
             logits, self.kv.pool = self._decode(
                 self.params, self.kv.pool, jnp.asarray(pt),
                 jnp.asarray(tokens), jnp.asarray(positions))
+        # fence before the host transfer so the tick's measured duration
+        # is dispatch + compute, not whenever the async stream drains
+        jax.block_until_ready(logits)
+        measured = time.monotonic() - t_start
         self.stats["decode_ticks"] += 1
+        # prediction priced at the PADDED jit batch — idle slots ride
+        # along in the fixed-shape dispatch, so B is what actually runs
+        self._emit_tick("decode", t_start, measured,
+                        self._predict("decode", B, 1), batch=len(ready),
+                        padded_batch=B, q_len=1, tokens=len(ready),
+                        rids=(s.req.rid for s in ready))
         rows = np.asarray(logits[:, 0])      # one host transfer per tick
         for seq in ready:
             tok = sample_token(rows[seq.slot], self.temperature,

@@ -44,6 +44,13 @@ class PageAllocator:
         self.page_size = page_size
         self._free: deque = deque(range(1, num_pages))
         self._allocated: set = set()
+        # lifetime telemetry counters (serving/telemetry): tick events
+        # report alloc/free *deltas* by differencing these, and min_free
+        # is the free-page low-water mark — how close the pool came to
+        # preemption pressure.
+        self.total_allocated = 0
+        self.total_freed = 0
+        self.min_free = len(self._free)
 
     @property
     def num_free(self) -> int:
@@ -62,6 +69,8 @@ class PageAllocator:
             return None
         pages = [self._free.popleft() for _ in range(n)]
         self._allocated.update(pages)
+        self.total_allocated += n
+        self.min_free = min(self.min_free, len(self._free))
         return pages
 
     def free(self, pages: Sequence[int]) -> None:
@@ -74,6 +83,7 @@ class PageAllocator:
             seen.add(p)
         self._allocated.difference_update(seen)
         self._free.extend(pages)
+        self.total_freed += len(seen)
 
 
 class JitLRU:

@@ -27,6 +27,13 @@ Under the SPMD engine (serving/engine/sharded.py) every bit of this state
 device-count-agnostic: a physical page id names the same logical page on
 every shard (each holds a 1/N kv-head slice of it), so admission, growth,
 preemption, window-trim, and chunk accounting run unchanged on any mesh.
+
+The scheduler owns the queue-side edges of each request's telemetry span
+(serving/telemetry): ``enqueue`` at submit, ``admit`` on slot grant,
+``preempt``/``requeue`` on a recompute preemption, ``release`` at
+eviction. The engine adds the compute-side edges (``chunk``,
+``first_token``, ``finish``). Both write into the same per-engine
+`Telemetry` recorder; a standalone scheduler gets its own.
 """
 from __future__ import annotations
 
@@ -37,6 +44,7 @@ from typing import Dict, List, Optional
 import numpy as np
 
 from repro.serving.engine.pool import PageAllocator
+from repro.serving.telemetry import Telemetry
 
 
 @dataclasses.dataclass(eq=False)
@@ -78,11 +86,13 @@ class ActiveSeq:
 
 class Scheduler:
     def __init__(self, allocator: PageAllocator, max_batch: int,
-                 max_model_len: int, *, reserve_upfront: bool = False):
+                 max_model_len: int, *, reserve_upfront: bool = False,
+                 telemetry: Optional[Telemetry] = None):
         self.allocator = allocator
         self.max_batch = max_batch
         self.max_model_len = max_model_len
         self.reserve_upfront = reserve_upfront
+        self.telemetry = telemetry if telemetry is not None else Telemetry()
         self.queue: deque = deque()
         self.active: Dict[int, ActiveSeq] = {}     # slot -> seq
         self._free_slots = list(reversed(range(max_batch)))
@@ -97,6 +107,9 @@ class Scheduler:
                 f"request {req.rid}: prompt+max_new={total} exceeds "
                 f"max_model_len={self.max_model_len}")
         self.queue.append(req)
+        self.telemetry.seq_event(req.rid, "enqueue",
+                                 prompt=len(req.prompt), max_new=req.max_new,
+                                 queue_depth=len(self.queue))
 
     def admit(self, now: float = float("inf")) -> List[ActiveSeq]:
         """Admit FIFO-front requests while a batch slot and enough pages are
@@ -130,6 +143,9 @@ class Scheduler:
             self._births += 1
             self.active[slot] = seq
             admitted.append(seq)
+            self.telemetry.seq_event(req.rid, "admit", slot=slot,
+                                     pages=len(pages),
+                                     queue_depth=len(self.queue))
         return admitted
 
     def ensure_capacity(self, seq: ActiveSeq) -> bool:
@@ -213,6 +229,12 @@ class Scheduler:
             max_new=seq.req.max_new - len(seq.generated))
         self.queue.appendleft(resumed)
         self.num_preempted += 1
+        self.telemetry.seq_event(seq.req.rid, "preempt",
+                                 generated=len(seq.generated),
+                                 pages_freed=sum(p != 0 for p in seq.pages))
+        self.telemetry.seq_event(seq.req.rid, "requeue",
+                                 prompt=len(resumed.prompt),
+                                 max_new=resumed.max_new)
 
     def release(self, seq: ActiveSeq) -> None:
         """Evict a finished sequence: free its pages and batch slot so the
@@ -221,6 +243,8 @@ class Scheduler:
         del self.active[seq.slot]
         self.allocator.free([p for p in seq.pages if p != 0])
         self._free_slots.append(seq.slot)
+        self.telemetry.seq_event(seq.req.rid, "release",
+                                 generated=len(seq.generated))
 
     # -------------------------------------------------------------- state --
     @property

@@ -300,6 +300,17 @@ class SpmdEngine:
             donate_argnums=(0,))
 
     # ------------------------------------------------------------ describe --
+    def event_tags(self) -> dict:
+        """Mesh tags stamped on every telemetry tick event
+        (serving/telemetry): lets a Chrome trace / calibration report
+        from a sharded run be told apart from — and grouped against —
+        single-device runs. One host drives all shards (the page table
+        and scheduler are replicated), so tags describe the mesh, not a
+        shard index."""
+        return {"mesh_model": self.mesh.shape.get(MODEL_AXIS, 1),
+                "mesh_data": self.mesh.shape.get("data", 1),
+                "mesh_devices": self.mesh.size}
+
     def describe(self) -> str:
         tp = self.mesh.shape.get(MODEL_AXIS, 1)
         dp = self.mesh.shape.get("data", 1)
