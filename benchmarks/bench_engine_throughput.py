@@ -114,7 +114,10 @@ LONG_RESIDENT_GEN = 224
 
 # explicit trace seeds: the JSON trajectory is only comparable across PRs
 # if every trace is reproducible
-TRACE_SEEDS = {"mixed": 0, "skewed": 1, "kv": 2, "long": 3}
+TRACE_SEEDS = {"mixed": 0, "skewed": 1, "kv": 2, "long": 3, "autotune": 4}
+
+AUTOTUNE_BUDGET = 48   # default search budget (objective evaluations)
+AUTOTUNE_TOPK = 3      # searched candidates re-measured on the real trace
 
 
 def make_trace(cfg, n, seed=0):
@@ -428,6 +431,70 @@ def bench_kv(model, params, cfg, n):
     return out
 
 
+def bench_autotune(model, params, cfg, n, *, budget, topk, config_out):
+    """The serving-stack autotuner on a mixed-shape trace: calibrate the
+    roofline on the hand-picked default config's warmup run, search the
+    engine config space on the scale-corrected roofline (DDPG +
+    evolutionary, serving/autotune), re-measure the top-k candidates on
+    the real engine, and ship the best *measured* config. Records
+    searched vs default decode tok/s (the CI-gated floor: the winner may
+    never measure below 0.95x the default — the default itself is in the
+    validation set, so the search can only ever tie or win), TTFT p50
+    for both, candidate counts, and the Spearman predicted-vs-measured
+    rank correlation of the calibrated objective."""
+    from repro.serving.autotune import (ConfigSpace, autotune_serving_config,
+                                        save_serving_config)
+
+    reqs = make_trace(cfg, n, seed=TRACE_SEEDS["autotune"])
+    space = ConfigSpace(cfg, V5E_EDGE, max_model_len=96,
+                        max_devices=jax.device_count(),
+                        max_batch_cap=MAX_BATCH,
+                        param_bytes=model.param_bytes())
+    tune = autotune_serving_config(model, params, space, reqs,
+                                   budget=budget, top_k=topk, seed=0)
+    ratio = tune.searched_vs_default
+    sec = {
+        "n": n, "budget": budget, "top_k": topk,
+        "method": tune.search.method, "seed": tune.search.seed,
+        "candidates": tune.search.evaluated,
+        "admissible": tune.search.admissible,
+        "validated": len(tune.validated),
+        "default": {
+            "config": tune.default.scored.config.as_dict(),
+            "decode_tok_s": tune.default.decode_tok_s,
+            "ttft_p50_ms": tune.default.ttft_p50_s * 1e3,
+        },
+        "searched": {
+            "config": tune.winner.scored.config.as_dict(),
+            "decode_tok_s": tune.winner.decode_tok_s,
+            "predicted_decode_tok_s":
+                tune.winner.scored.pred_decode_tok_s,
+            "ttft_p50_ms": tune.winner.ttft_p50_s * 1e3,
+        },
+        "searched_vs_default": ratio,
+        "rank_correlation": tune.rank_correlation,
+        "calibration_scale": dict(tune.scales.by_kind),
+    }
+    if config_out:
+        save_serving_config(config_out, tune.record(space))
+        print(f"# wrote searched serving config {config_out}", flush=True)
+    corr = tune.rank_correlation
+    row("engine/autotune-searched", ratio,
+        f"searched_tok_s={tune.winner.decode_tok_s:.1f};"
+        f"default_tok_s={tune.default.decode_tok_s:.1f};"
+        f"ratio={ratio:.2f}x;candidates={tune.search.evaluated};"
+        f"corr=" + ("-" if corr is None else f"{corr:.2f}")
+        + f";target>=0.95x;pass={ratio >= 0.95}")
+    print(f"# autotune: searched {tune.winner.decode_tok_s:.1f} decode "
+          f"tok/s vs default {tune.default.decode_tok_s:.1f} "
+          f"({ratio:.2f}x) over {tune.search.evaluated} candidates "
+          f"({tune.search.admissible} admissible, "
+          f"{len(tune.validated)} measured); rank corr "
+          + ("n/a" if corr is None else f"{corr:.2f}")
+          + f"; winner {tune.winner.scored.config.as_dict()}", flush=True)
+    return sec
+
+
 def bench_sharded(model, params, cfg, n):
     """1-device vs SPMD mesh on the mixed trace shape (same policy, same
     trace, outputs asserted identical) + mesh-aware admission capacity."""
@@ -505,6 +572,16 @@ def main():
     ap.add_argument("--sharded-requests", type=int, default=6,
                     help="sharded trace size (0 skips; auto-skips with a "
                          "note when <2 devices are visible)")
+    ap.add_argument("--autotune-requests", type=int, default=8,
+                    help="autotune trace size (0 skips the section)")
+    ap.add_argument("--autotune-budget", type=int, default=AUTOTUNE_BUDGET,
+                    help="autotune search budget in objective evaluations")
+    ap.add_argument("--autotune-topk", type=int, default=AUTOTUNE_TOPK,
+                    help="searched candidates re-measured on the engine")
+    ap.add_argument("--autotune-config-out", default="",
+                    help="write the searched per-hardware serving config "
+                         "JSON here ('' disables; load it back with "
+                         "launch/serve.py --serving-config)")
     ap.add_argument("--out", default="BENCH_engine.json",
                     help="machine-readable results file ('' disables)")
     ap.add_argument("--trace-out", default="",
@@ -549,6 +626,11 @@ def main():
         sharded = bench_sharded(model, params, cfg, args.sharded_requests)
         if sharded is not None:
             results["sharded"] = sharded
+    if args.autotune_requests:
+        results["autotune"] = bench_autotune(
+            model, params, cfg, args.autotune_requests,
+            budget=args.autotune_budget, topk=args.autotune_topk,
+            config_out=args.autotune_config_out)
     if args.out:
         with open(args.out, "w") as f:
             json.dump(results, f, indent=2, sort_keys=True)

@@ -28,6 +28,15 @@ invariants the same way:
   scale >= 1.9x from 1 to 2 model shards (the kv-head split really halves
   per-device page bytes).
 
+The autotune section (serving-stack autotuner) likewise carries
+fresh-only invariants:
+
+* ``searched_vs_default >= 0.95`` — the searched config's *measured*
+  decode tok/s may never fall below 0.95x the hand-picked default (the
+  default is in the validation set, so the tuner can only tie or win);
+* ``candidates >= 1`` and ``admissible >= 1`` — the search actually
+  evaluated something.
+
 Before any comparison both files are **schema-validated**: a bench doc
 must carry a ``schema`` version, a non-empty ``config.trace_seeds`` list
 (the seeds the traces were drawn from — a doc without them is not
@@ -56,6 +65,21 @@ import sys
 STALL_REDUCTION_MIN = 2.0
 TOK_S_RATIO_MIN = 0.9
 SHARDED_PAGES_SCALING_MIN = 1.9
+AUTOTUNE_RATIO_MIN = 0.95
+AUTOTUNE_CANDIDATES_MIN = 1
+
+# required keys of the bench's ``autotune`` section (when present) —
+# the gate's floors read these, so a doc that drops one is malformed,
+# not merely incomplete
+AUTOTUNE_REQUIRED_KEYS = (
+    "n",
+    "budget",
+    "candidates",
+    "admissible",
+    "default",
+    "searched",
+    "searched_vs_default",
+)
 
 
 def numeric_leaves(node, path=()):
@@ -86,6 +110,19 @@ def validate_schema(doc, name="doc"):
         problems.append(
             f"{name}: missing or empty config.trace_seeds "
             "(bench traces must record their seeds)")
+    autotune = doc.get("autotune")
+    if autotune is not None:
+        if not isinstance(autotune, dict):
+            problems.append(f"{name}: autotune section is not an object")
+        else:
+            for key in AUTOTUNE_REQUIRED_KEYS:
+                if key not in autotune:
+                    problems.append(f"{name}: autotune missing '{key}'")
+            for side in ("default", "searched"):
+                sub = autotune.get(side)
+                if isinstance(sub, dict) and "decode_tok_s" not in sub:
+                    problems.append(
+                        f"{name}: autotune.{side} missing 'decode_tok_s'")
     for path, value in numeric_leaves(doc):
         if value != value:                       # NaN
             problems.append(f"{name}: NaN at {path}")
@@ -200,6 +237,45 @@ def check_sharded(fresh):
     return rows, failures
 
 
+def check_autotune(fresh):
+    """Acceptance invariants of the autotune section (fresh-only: the
+    searched/default ratio is two same-machine measurements, so it
+    transfers across runner classes)."""
+    rows = []
+    failures = []
+    section = fresh.get("autotune")
+    if not isinstance(section, dict):
+        return rows, failures
+    path = "autotune.searched_vs_default"
+    floor = AUTOTUNE_RATIO_MIN
+    ratio = section.get("searched_vs_default")
+    if ratio is None:
+        rows.append((path, floor, None, None, "SKIP (not recorded)"))
+    elif ratio >= floor:
+        rows.append((path, floor, ratio, None, "OK"))
+    else:
+        rows.append((path, floor, ratio, None, f"FAIL (< {floor})"))
+        failures.append(
+            f"{path}: searched config measured {ratio:.2f}x the default "
+            f"(floor {floor}x) — the autotuner shipped a regression"
+        )
+    for key in ("candidates", "admissible"):
+        path = f"autotune.{key}"
+        floor = AUTOTUNE_CANDIDATES_MIN
+        count = section.get(key)
+        if count is None:
+            rows.append((path, floor, None, None, "SKIP (not recorded)"))
+        elif count >= floor:
+            rows.append((path, floor, count, None, "OK"))
+        else:
+            rows.append((path, floor, count, None, f"FAIL (< {floor})"))
+            failures.append(
+                f"{path}: {count} below the {floor} floor "
+                "(the search evaluated nothing)"
+            )
+    return rows, failures
+
+
 def _fmt(value):
     if value is None:
         return "-"
@@ -277,6 +353,16 @@ def main():
         print("sharded-engine acceptance (fresh run, machine-independent):")
         print_table(
             [(p, f, v, s) for p, f, v, _, s in sh_rows],
+            ("invariant", "floor", "value", "status"),
+        )
+
+    at_rows, at_failures = check_autotune(fresh)
+    failures.extend(at_failures)
+    if at_rows:
+        print()
+        print("autotune acceptance (fresh run, machine-independent):")
+        print_table(
+            [(p, f, v, s) for p, f, v, _, s in at_rows],
             ("invariant", "floor", "value", "status"),
         )
 

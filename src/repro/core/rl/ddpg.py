@@ -5,6 +5,7 @@ truncated-normal exploration noise with decay, soft target updates, and a
 numpy ring-buffer replay. Small MLPs (the paper's agents are 2x300 hidden) so
 a full search runs in seconds on CPU.
 """
+
 from __future__ import annotations
 
 import dataclasses
@@ -22,7 +23,7 @@ class DDPGConfig:
     hidden: int = 128
     actor_lr: float = 1e-3
     critic_lr: float = 1e-3
-    gamma: float = 1.0          # episodic, finite-horizon (AMC uses 1)
+    gamma: float = 1.0  # episodic, finite-horizon (AMC uses 1)
     tau: float = 0.01
     noise0: float = 0.5
     noise_decay: float = 0.99
@@ -33,7 +34,7 @@ class DDPGConfig:
 
 def _mlp_init(key, sizes):
     params = []
-    for i, (a, b) in enumerate(zip(sizes[:-1], sizes[1:])):
+    for a, b in zip(sizes[:-1], sizes[1:]):
         key, k = jax.random.split(key)
         w = jax.random.normal(k, (a, b), F32) / np.sqrt(a)
         params.append({"w": w, "b": jnp.zeros((b,), F32)})
@@ -77,8 +78,13 @@ class ReplayBuffer:
 
     def sample(self, rng: np.random.Generator, batch: int):
         idx = rng.integers(0, self.n, size=batch)
-        return (self.s[idx], self.a[idx], self.r[idx], self.s2[idx],
-                self.done[idx])
+        return (
+            self.s[idx],
+            self.a[idx],
+            self.r[idx],
+            self.s2[idx],
+            self.done[idx],
+        )
 
 
 class DDPG:
@@ -87,8 +93,9 @@ class DDPG:
         key = jax.random.PRNGKey(seed)
         ka, kc = jax.random.split(key)
         self.actor = _mlp_init(ka, [cfg.state_dim, cfg.hidden, cfg.hidden, 1])
-        self.critic = _mlp_init(kc, [cfg.state_dim + 1, cfg.hidden,
-                                     cfg.hidden, 1])
+        self.critic = _mlp_init(
+            kc, [cfg.state_dim + 1, cfg.hidden, cfg.hidden, 1]
+        )
         self.t_actor = jax.tree.map(lambda x: x, self.actor)
         self.t_critic = jax.tree.map(lambda x: x, self.critic)
         self.buffer = ReplayBuffer(cfg.buffer, cfg.state_dim)
@@ -111,16 +118,22 @@ class DDPG:
     def end_episode(self, updates: int = 32):
         self.episode += 1
         self.noise *= self.cfg.noise_decay
-        if self.episode < self.cfg.warmup_episodes \
-                or self.buffer.n < self.cfg.batch:
+        if (
+            self.episode < self.cfg.warmup_episodes
+            or self.buffer.n < self.cfg.batch
+        ):
             return {}
         losses = {}
         for _ in range(updates):
             batch = self.buffer.sample(self.rng, self.cfg.batch)
-            (self.actor, self.critic, self.t_actor, self.t_critic,
-             losses) = self._train_step(
-                self.actor, self.critic, self.t_actor, self.t_critic,
-                *[jnp.asarray(b) for b in batch])
+            out = self._train_step(
+                self.actor,
+                self.critic,
+                self.t_actor,
+                self.t_critic,
+                *[jnp.asarray(b) for b in batch],
+            )
+            self.actor, self.critic, self.t_actor, self.t_critic, losses = out
         return {k: float(v) for k, v in losses.items()}
 
     # ------------------------------------------------------------- update --
@@ -133,21 +146,30 @@ class DDPG:
 
             def critic_loss(cp):
                 q = critic_fwd(cp, s, a)
-                return jnp.mean(jnp.square(q - jax.lax.stop_gradient(target)))
+                err = q - jax.lax.stop_gradient(target)
+                return jnp.mean(jnp.square(err))
 
             def actor_loss(ap):
                 return -jnp.mean(critic_fwd(critic, s, actor_fwd(ap, s)))
 
             cl, gc = jax.value_and_grad(critic_loss)(critic)
             al, ga = jax.value_and_grad(actor_loss)(actor)
-            critic = jax.tree.map(lambda p, g: p - cfg.critic_lr * g,
-                                  critic, gc)
+            critic = jax.tree.map(
+                lambda p, g: p - cfg.critic_lr * g, critic, gc
+            )
             actor = jax.tree.map(lambda p, g: p - cfg.actor_lr * g, actor, ga)
             t_critic = jax.tree.map(
-                lambda t, p: (1 - cfg.tau) * t + cfg.tau * p, t_critic, critic)
+                lambda t, p: (1 - cfg.tau) * t + cfg.tau * p, t_critic, critic
+            )
             t_actor = jax.tree.map(
-                lambda t, p: (1 - cfg.tau) * t + cfg.tau * p, t_actor, actor)
-            return actor, critic, t_actor, t_critic, \
-                {"critic_loss": cl, "actor_loss": al}
+                lambda t, p: (1 - cfg.tau) * t + cfg.tau * p, t_actor, actor
+            )
+            return (
+                actor,
+                critic,
+                t_actor,
+                t_critic,
+                {"critic_loss": cl, "actor_loss": al},
+            )
 
         return step

@@ -8,6 +8,10 @@ reference baseline for equivalence tests and throughput comparisons.
 ``python -m repro.launch.serve --arch gemma2-2b --tiny --kv-policy haq``
 ``XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
   python -m repro.launch.serve --arch gemma2-2b --tiny --mesh model=2,data=4``
+``python -m repro.launch.serve --arch gemma2-2b --tiny \\
+  --autotune 64 --autotune-out SERVING_gemma2.json``
+``python -m repro.launch.serve --arch gemma2-2b --tiny \\
+  --serving-config SERVING_gemma2.json``
 """
 from __future__ import annotations
 
@@ -227,6 +231,25 @@ def main():
                          "request spans as Chrome trace-event JSON to this "
                          "path (open in Perfetto / chrome://tracing) and "
                          "print the telemetry summary")
+    ap.add_argument("--serving-config", default="",
+                    help="engine mode: load a searched per-hardware "
+                         "serving config JSON (serving/autotune, written "
+                         "by --autotune-out or the bench's "
+                         "--autotune-config-out) instead of hand-picking "
+                         "knobs; owns page size, prefill chunk, occupancy, "
+                         "KV policy, mesh split, and the batch cap")
+    ap.add_argument("--autotune", type=int, default=0, metavar="BUDGET",
+                    help="engine mode: autotune the serving config before "
+                         "serving — calibrate the admission roofline on a "
+                         "warmup run, search the config space "
+                         "(DDPG + evolution, serving/autotune) with this "
+                         "many objective evaluations, validate the top "
+                         "candidates on the real engine, and serve the "
+                         "trace with the measured winner (0 = off)")
+    ap.add_argument("--autotune-out", default="",
+                    help="with --autotune: write the searched serving "
+                         "config JSON here for --serving-config to load "
+                         "back ('' disables)")
     ap.add_argument("--kv-policy", default="",
                     help="engine mode: per-layer KV bit policy — 'haq' "
                          "runs the HAQ search over KV sites "
@@ -250,6 +273,19 @@ def main():
     if args.sequential and args.trace_out:
         ap.error("--trace-out applies to engine mode only; the sequential "
                  "baseline has no telemetry recorder")
+    if args.sequential and (args.autotune or args.serving_config):
+        ap.error("--autotune/--serving-config apply to engine mode only; "
+                 "the sequential baseline has no admission policy to tune")
+    if args.autotune and args.serving_config:
+        ap.error("--serving-config loads a finished search; drop it or "
+                 "drop --autotune")
+    if args.autotune_out and not args.autotune:
+        ap.error("--autotune-out only makes sense with --autotune")
+    if (args.autotune or args.serving_config) and (
+            args.kv_policy or args.kv_bits != 16 or args.mesh):
+        ap.error("--kv-bits/--kv-policy/--mesh are knobs the serving "
+                 "config owns; drop them when using "
+                 "--autotune/--serving-config")
 
     cfg = tiny_config(args.arch) if args.tiny else get_config(args.arch)
     model = build_model(cfg)
@@ -286,44 +322,96 @@ def main():
     if occupancy is None:
         occupancy = 1.0 if args.reserve_upfront else 0.5
 
-    kv_bits = None if args.kv_bits == 16 else args.kv_bits
-    if args.kv_policy == "haq":
-        from repro.serving.kvquant import search_kv_policy
-        res = search_kv_policy(cfg, hw, max_model_len=max_len, episodes=8)
-        kv_bits = res["bits"]
-        print(f"kvquant[haq]: {res['policy']} "
-              f"({res['kv_bytes_per_token_fp']}->"
-              f"{res['kv_bytes_per_token']} B/token)")
-    elif args.kv_policy:
-        from repro.models.transformer import normalize_kv_bits
-        kv_bits = normalize_kv_bits(
-            cfg, json.load(open(args.kv_policy)))
+    reqs = _make_requests(args, cfg)
 
-    mesh = None
-    mesh_sizes = {"model": 1, "data": 1}
-    if args.mesh:
-        from repro.launch.mesh import make_serving_mesh
-        try:
-            mesh_sizes = _parse_mesh(args.mesh)
-            mesh = make_serving_mesh(**mesh_sizes)
-        except ValueError as e:
-            ap.error(str(e))
+    if args.serving_config or args.autotune:
+        # the serving config owns every knob the flags below would set;
+        # the incompatible-flag combinations already errored above
+        from repro.serving.autotune import (ConfigSpace,
+                                            autotune_serving_config,
+                                            load_serving_config,
+                                            save_serving_config)
+        space = ConfigSpace(cfg, hw, max_model_len=max_len,
+                            max_devices=jax.device_count(),
+                            max_batch_cap=args.max_batch or 8,
+                            param_bytes=model.param_bytes())
+        if args.serving_config:
+            sc, record = load_serving_config(args.serving_config)
+            if (record.get("arch"), record.get("hw"),
+                    record.get("max_model_len")) != \
+                    (cfg.name, hw.name, max_len):
+                print(f"serving-config: note — searched for "
+                      f"{record.get('arch')}@{record.get('max_model_len')} "
+                      f"on {record.get('hw')}, serving "
+                      f"{cfg.name}@{max_len} on {hw.name}")
+            print(f"serving-config[{record.get('hw')}]: {sc.as_dict()}")
+        else:
+            t0 = time.time()
+            tune = autotune_serving_config(model, params, space, reqs,
+                                           budget=args.autotune, seed=0)
+            sc = tune.winner.scored.config
+            corr = tune.rank_correlation
+            print(f"autotune[{hw.name}]: {tune.search.evaluated} "
+                  f"candidates ({tune.search.admissible} admissible) in "
+                  f"{time.time() - t0:.1f}s -> "
+                  f"{tune.winner.decode_tok_s:.1f} decode tok/s vs "
+                  f"default {tune.default.decode_tok_s:.1f} "
+                  f"({tune.searched_vs_default:.2f}x), rank corr "
+                  + ("n/a" if corr is None else f"{corr:.2f}"))
+            print(f"autotune[{hw.name}]: winner {sc.as_dict()}")
+            if args.autotune_out:
+                save_serving_config(args.autotune_out, tune.record(space))
+                print(f"autotune: wrote {args.autotune_out} "
+                      f"(load with --serving-config)")
+        bad = space.violations(sc)
+        if bad:
+            ap.error(f"serving config not admissible for {cfg.name}@"
+                     f"{max_len} on {hw.name}: {'; '.join(bad)}")
+        policy = space.to_policy(sc)
+        mesh = None
+        if sc.mesh_model > 1:
+            from repro.launch.mesh import make_serving_mesh
+            mesh = make_serving_mesh(model=sc.mesh_model, data=1)
+    else:
+        kv_bits = None if args.kv_bits == 16 else args.kv_bits
+        if args.kv_policy == "haq":
+            from repro.serving.kvquant import search_kv_policy
+            res = search_kv_policy(cfg, hw, max_model_len=max_len,
+                                   episodes=8)
+            kv_bits = res["bits"]
+            print(f"kvquant[haq]: {res['policy']} "
+                  f"({res['kv_bytes_per_token_fp']}->"
+                  f"{res['kv_bytes_per_token']} B/token)")
+        elif args.kv_policy:
+            from repro.models.transformer import normalize_kv_bits
+            kv_bits = normalize_kv_bits(
+                cfg, json.load(open(args.kv_policy)))
 
-    policy = derive_policy(cfg, hw, max_model_len=max_len,
-                           page_size=args.page_size,
-                           expected_occupancy=occupancy,
-                           param_bytes=model.param_bytes(),
-                           kv_bits=kv_bits,
-                           mesh_model=mesh_sizes["model"],
-                           mesh_data=mesh_sizes["data"])
-    if args.max_batch or args.prefill_chunk:
-        import dataclasses
-        over = {}
-        if args.max_batch:
-            over["max_batch"] = args.max_batch
-        if args.prefill_chunk:
-            over["prefill_chunk"] = args.prefill_chunk
-        policy = dataclasses.replace(policy, **over)
+        mesh = None
+        mesh_sizes = {"model": 1, "data": 1}
+        if args.mesh:
+            from repro.launch.mesh import make_serving_mesh
+            try:
+                mesh_sizes = _parse_mesh(args.mesh)
+                mesh = make_serving_mesh(**mesh_sizes)
+            except ValueError as e:
+                ap.error(str(e))
+
+        policy = derive_policy(cfg, hw, max_model_len=max_len,
+                               page_size=args.page_size,
+                               expected_occupancy=occupancy,
+                               param_bytes=model.param_bytes(),
+                               kv_bits=kv_bits,
+                               mesh_model=mesh_sizes["model"],
+                               mesh_data=mesh_sizes["data"])
+        if args.max_batch or args.prefill_chunk:
+            import dataclasses
+            over = {}
+            if args.max_batch:
+                over["max_batch"] = args.max_batch
+            if args.prefill_chunk:
+                over["prefill_chunk"] = args.prefill_chunk
+            policy = dataclasses.replace(policy, **over)
     print(f"admission[{hw.name}]: max_batch={policy.max_batch} "
           f"prefill_chunk={policy.prefill_chunk} "
           f"chunked={not args.no_chunked_prefill} "
@@ -337,7 +425,6 @@ def main():
                     reserve_upfront=args.reserve_upfront,
                     chunked_prefill=not args.no_chunked_prefill,
                     mesh=mesh)
-    reqs = _make_requests(args, cfg)
     t0 = time.time()
     outs = engine.run(reqs)
     dt = time.time() - t0

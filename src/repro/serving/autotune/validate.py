@@ -1,0 +1,149 @@
+"""Validate searched configs against the real engine.
+
+The calibrated roofline ranks thousands of candidates; the top few are
+then *measured* — a real `Engine` built from each candidate's policy,
+warmed on the exact trace and re-timed (jit compiles excluded), exactly
+the methodology of benchmarks/bench_engine_throughput.py. The winner is
+the best MEASURED candidate, and `spearman` reports how well the
+calibrated objective predicted the measured ranking — the paper's
+predicted-vs-measured fidelity number, recorded in the bench's
+``autotune`` section.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.serving.autotune.objective import ScoredCandidate
+from repro.serving.autotune.space import ConfigSpace
+from repro.serving.engine import Engine
+
+
+@dataclasses.dataclass
+class MeasuredCandidate:
+    scored: ScoredCandidate
+    decode_tok_s: float
+    ttft_p50_s: float
+    wall_s: float
+    decode_ticks: int
+    preemptions: int
+
+    def as_dict(self) -> Dict:
+        d = dataclasses.asdict(self)
+        d["scored"] = self.scored.as_dict()
+        return d
+
+
+def measure_candidate(
+    model,
+    params,
+    space: ConfigSpace,
+    scored: ScoredCandidate,
+    reqs,
+    *,
+    roofline_scales=None,
+    engine: Optional[Engine] = None,
+) -> Optional[MeasuredCandidate]:
+    """Serve ``reqs`` through an engine built from the candidate; warm
+    on the exact trace, then re-time the same instance. Returns None for
+    candidates this host cannot run (mesh split wider than the visible
+    devices). Pass ``engine`` to reuse an already-built engine (the
+    default config's calibration engine)."""
+    import jax
+
+    c = scored.config
+    if engine is None:
+        if c.mesh_model > jax.device_count():
+            return None
+        mesh = None
+        if c.mesh_model > 1:
+            from repro.launch.mesh import make_serving_mesh
+
+            mesh = make_serving_mesh(model=c.mesh_model, data=1)
+        policy = space.to_policy(c)
+        engine = Engine(
+            model,
+            params,
+            policy,
+            mesh=mesh,
+            roofline_scales=roofline_scales,
+        )
+    engine.run(reqs, realtime=False)  # warm: jit compiles off the clock
+    engine.reset_stats()
+    t0 = time.monotonic()
+    engine.run(reqs, realtime=False)
+    dt = time.monotonic() - t0
+    stats = engine.stats
+    ttft = sorted(engine.first_token_s.values())
+    return MeasuredCandidate(
+        scored=scored,
+        decode_tok_s=stats["decode_tokens"] / dt if dt > 0 else 0.0,
+        ttft_p50_s=float(np.median(ttft)) if ttft else 0.0,
+        wall_s=dt,
+        decode_ticks=stats["decode_ticks"],
+        preemptions=stats["preemptions"],
+    )
+
+
+def validate_candidates(
+    model,
+    params,
+    space: ConfigSpace,
+    scored: List[ScoredCandidate],
+    reqs,
+    *,
+    roofline_scales=None,
+) -> List[MeasuredCandidate]:
+    """Measure each candidate (preserving order, skipping unmeasurable
+    ones); duplicate configs are measured once."""
+    out: List[MeasuredCandidate] = []
+    seen = set()
+    for s in scored:
+        if s.config in seen:
+            continue
+        seen.add(s.config)
+        m = measure_candidate(
+            model,
+            params,
+            space,
+            s,
+            reqs,
+            roofline_scales=roofline_scales,
+        )
+        if m is not None:
+            out.append(m)
+    return out
+
+
+def spearman(xs, ys) -> Optional[float]:
+    """Spearman rank correlation (average ranks on ties); None when
+    fewer than 3 points or either side is constant — a correlation from
+    2 points is a coin flip, and NaN must never reach the bench JSON."""
+    xs = np.asarray(xs, np.float64)
+    ys = np.asarray(ys, np.float64)
+    if xs.size != ys.size or xs.size < 3:
+        return None
+    if np.ptp(xs) == 0.0 or np.ptp(ys) == 0.0:
+        return None
+
+    def ranks(v):
+        order = np.argsort(v, kind="stable")
+        r = np.empty_like(v)
+        r[order] = np.arange(v.size, dtype=np.float64)
+        # average tied ranks
+        for val in np.unique(v):
+            m = v == val
+            r[m] = r[m].mean()
+        return r
+
+    rx, ry = ranks(xs), ranks(ys)
+    rx -= rx.mean()
+    ry -= ry.mean()
+    denom = float(np.sqrt((rx * rx).sum() * (ry * ry).sum()))
+    if denom == 0.0:
+        return None
+    return float((rx * ry).sum() / denom)

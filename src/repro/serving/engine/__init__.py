@@ -187,6 +187,40 @@ predicted per (kind, batch, q_len) — the per-kind scale factors
 `core/hardware_model`'s roofline needs to match this host, feeding the
 ROADMAP's serving-stack autotuner.
 
+Autotuning (serving/autotune)
+-----------------------------
+The knobs above — page size, prefill chunk, expected occupancy, KV-bit
+policy, mesh split, batch cap — form a typed config space
+(`autotune.ConfigSpace`), and the serving-stack autotuner searches it the
+way the paper searches bit policies:
+
+1. **calibrate** — serve a short warmup trace with the hand-picked
+   default; ``telemetry.calibrate(...).scale_lookup()`` fits per-(kind,
+   batch, q_len) scale factors between the roofline's ``predicted_s``
+   and the fenced ``measured_s`` on THIS host.
+2. **search** — DDPG (`core/rl/ddpg.py`, the AMC/HAQ agent) plus a
+   seeded evolutionary baseline walk the space, scored by the
+   scale-corrected ``admission.step_latency`` (`autotune.Objective`;
+   thousands of candidates per second, deterministic per seed). Kinds
+   with no calibration fall back to the raw roofline with a logged
+   warning — never silent zeros or a made-up 1.0.
+3. **validate** — the top-k candidates are re-measured on the real
+   engine next to the default; the *measured* best wins (ties ship the
+   default), with the Spearman predicted-vs-measured rank correlation
+   reported.
+4. **emit** — the winner serializes as a per-hardware JSON config;
+   ``launch/serve.py --autotune N --autotune-out f.json`` writes it,
+   ``--serving-config f.json`` loads it back, and
+   ``Engine(roofline_scales=...)`` threads the calibration into the
+   telemetry predictions of the tuned engine.
+
+Re-fit on a new host by simply re-running ``--autotune`` there: the
+warmup trace is the calibration. CI's autotune-smoke lane runs a
+32-candidate search on the 4-request trace and gates that the searched
+config's measured decode tok/s never falls below 0.95x the default
+(scripts/check_bench_regression.py, ``autotune`` floors); nightly runs
+the full budget.
+
 Modules: `pool` (page allocator + device pool + bounded jit caches +
 span-capable prefill writer), `scheduler` (FIFO admission / growth /
 preemption / eviction / window-trim / prefill-progress bookkeeping),

@@ -181,15 +181,26 @@ class RooflinePredictor:
     Hand-built policies (tests) may name a hardware target that is not in
     ``HARDWARES``; prediction is then 0.0 — "no prediction" — which
     calibration and the Chrome trace both represent explicitly rather
-    than inventing a number."""
+    than inventing a number.
 
-    def __init__(self, cfg, policy: AdmissionPolicy):
+    ``scales`` (a `telemetry.calibrate.ScaleLookup`, or anything with its
+    ``scale(kind, batch, q_len) -> Optional[float]`` shape) turns the raw
+    roofline into the host-corrected prediction the autotuner searches
+    on: the memoized analytic latency is multiplied by the fitted
+    measured/predicted factor for the dispatch shape (exact shape first,
+    then the kind's aggregate). A kind the warmup never measured resolves
+    to None and the raw roofline passes through unscaled — never zeroed."""
+
+    def __init__(self, cfg, policy: AdmissionPolicy, scales=None):
         self.cfg = cfg
         self.policy = policy
+        self.scales = scales
         self.hw = hwm.HARDWARES.get(policy.hw_name)
         self._memo: dict = {}
 
-    def __call__(self, kind: str, batch: int, q_len: int) -> float:
+    def raw(self, kind: str, batch: int, q_len: int) -> float:
+        """The uncalibrated analytic roofline for one dispatch shape
+        (0.0 = no prediction for an unknown hardware target)."""
         key = (kind, batch, q_len)
         got = self._memo.get(key)
         if got is None:
@@ -202,6 +213,14 @@ class RooflinePredictor:
                     w_bits=p.quant_bits, kv_bits=p.kv_bits,
                     mesh_model=p.mesh_model))
             self._memo[key] = got
+        return got
+
+    def __call__(self, kind: str, batch: int, q_len: int) -> float:
+        got = self.raw(kind, batch, q_len)
+        if self.scales is not None and got > 0.0:
+            s = self.scales.scale(kind, batch, q_len)
+            if s is not None:
+                got *= s
         return got
 
 

@@ -93,7 +93,8 @@ class Engine:
                  temperature: float = 0.0, seed: int = 0, dot=None,
                  paged_kernel: str = "auto", reserve_upfront: bool = False,
                  chunked_prefill: bool = True, mesh=None,
-                 telemetry: Optional[Telemetry] = None):
+                 telemetry: Optional[Telemetry] = None,
+                 roofline_scales=None):
         cfg = model.cfg
         if cfg.is_encdec or cfg.family not in ("dense", "moe") \
                 or cfg.frontend != "none":
@@ -111,8 +112,13 @@ class Engine:
         # (custom sink / clock) to stream or capture events.
         self.telemetry = telemetry if telemetry is not None else Telemetry()
         # roofline predictions per dispatch shape, memoized (telemetry
-        # pairs them with measured wall clock on every tick event)
-        self._predict = RooflinePredictor(cfg, policy)
+        # pairs them with measured wall clock on every tick event). Pass
+        # ``roofline_scales`` (a telemetry.ScaleLookup fitted on THIS host
+        # by telemetry.calibrate) to emit host-corrected predictions —
+        # what the autotuner's validation engines do, so their traces
+        # report calibrated rel_err instead of the raw roofline's.
+        self._predict = RooflinePredictor(cfg, policy,
+                                          scales=roofline_scales)
 
         if mesh is not None and policy.quant_bits < 16:
             raise NotImplementedError(

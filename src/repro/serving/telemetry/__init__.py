@@ -49,7 +49,8 @@ Modules: `events` (typed event/span dataclasses), `metrics` (registry),
 summary), `calibrate` (predicted-vs-measured fits).
 """
 from repro.serving.telemetry.calibrate import (CalibrationGroup,
-                                               CalibrationReport, calibrate)
+                                               CalibrationReport,
+                                               ScaleLookup, calibrate)
 from repro.serving.telemetry.events import (SEQ_EVENTS, TICK_KINDS, SeqEvent,
                                             SeqSpan, StallRecord, TickEvent)
 from repro.serving.telemetry.metrics import (Counter, Gauge, Histogram,
@@ -61,7 +62,8 @@ from repro.serving.telemetry.trace import (chrome_trace, summarize,
                                            write_chrome_trace)
 
 __all__ = [
-    "CalibrationGroup", "CalibrationReport", "calibrate",
+    "CalibrationGroup", "CalibrationReport", "ScaleLookup",
+    "calibrate",
     "SEQ_EVENTS", "TICK_KINDS", "SeqEvent", "SeqSpan", "StallRecord",
     "TickEvent", "Counter", "Gauge", "Histogram", "MetricsRegistry",
     "Telemetry", "NULL_SINK", "NullSink", "RecordingSink", "Sink",

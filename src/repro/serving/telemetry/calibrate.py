@@ -44,6 +44,60 @@ class CalibrationGroup:
 
 
 @dataclasses.dataclass
+class ScaleLookup:
+    """Calibration scales as a queryable lookup — the report's export for
+    consumers that price rooflines at arbitrary shapes (the serving-stack
+    autotuner, `admission.RooflinePredictor(scales=...)`).
+
+    Resolution order for ``scale(kind, batch, q_len)``:
+
+      1. the exact (kind, batch, q_len) group the warmup trace measured;
+      2. the kind's sample-weighted aggregate scale (the shape searched
+         by the autotuner rarely matches a warmup shape exactly — the
+         per-kind factor is the transferable signal);
+      3. ``None`` — no calibration for this kind (e.g. the warmup engine
+         ran an unknown ``hw_name``, so every prediction was 0.0 and
+         `calibrate` fitted nothing). Callers must fall back to the raw
+         roofline explicitly rather than multiplying by a made-up 1.0
+         silently — see autotune/objective.py for the logged fallback.
+
+    Only finite, positive fits are stored; ``from_dict`` round-trips the
+    JSON shape written into serving-config files.
+    """
+    by_shape: Dict[Tuple[str, int, int], float] = \
+        dataclasses.field(default_factory=dict)
+    by_kind: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    def scale(self, kind: str, batch: Optional[int] = None,
+              q_len: Optional[int] = None) -> Optional[float]:
+        if batch is not None and q_len is not None:
+            got = self.by_shape.get((kind, int(batch), int(q_len)))
+            if got is not None:
+                return got
+        return self.by_kind.get(kind)
+
+    def kinds(self) -> Tuple[str, ...]:
+        return tuple(sorted(self.by_kind))
+
+    def as_dict(self) -> Dict:
+        return {
+            "by_kind": dict(self.by_kind),
+            "by_shape": {f"{k}/{b}/{q}": s
+                         for (k, b, q), s in sorted(self.by_shape.items())},
+        }
+
+    @classmethod
+    def from_dict(cls, d: Dict) -> "ScaleLookup":
+        by_shape = {}
+        for key, s in (d.get("by_shape") or {}).items():
+            kind, b, q = key.rsplit("/", 2)
+            by_shape[(kind, int(b), int(q))] = float(s)
+        return cls(by_shape=by_shape,
+                   by_kind={k: float(v)
+                            for k, v in (d.get("by_kind") or {}).items()})
+
+
+@dataclasses.dataclass
 class CalibrationReport:
     groups: List[CalibrationGroup]
 
@@ -77,6 +131,20 @@ class CalibrationReport:
                 den += g.n
             out[kind] = (num / den) if den else None
         return out
+
+    def scale_lookup(self) -> ScaleLookup:
+        """Export the fits as a `ScaleLookup` (exact-shape scales plus the
+        per-kind aggregates). Groups with no prediction (scale None) are
+        dropped — the lookup answers None for them and the caller decides
+        how to fall back."""
+        by_shape = {
+            (g.kind, g.batch, g.q_len): float(g.scale)
+            for g in self.groups
+            if g.scale is not None and g.scale > 0.0
+        }
+        by_kind = {k: float(s) for k, s in self.scale_factors().items()
+                   if s is not None and s > 0.0}
+        return ScaleLookup(by_shape=by_shape, by_kind=by_kind)
 
     def as_dict(self) -> Dict:
         return {

@@ -123,6 +123,55 @@ def test_check_sharded_floors(gate):
     assert gate.check_sharded(_doc()) == ([], [])
 
 
+def _autotune_section(**over):
+    sec = {"n": 4, "budget": 32, "candidates": 12, "admissible": 10,
+           "default": {"decode_tok_s": 300.0},
+           "searched": {"decode_tok_s": 360.0},
+           "searched_vs_default": 1.2}
+    sec.update(over)
+    return sec
+
+
+def test_check_autotune_floors(gate):
+    ok = _doc(autotune=_autotune_section())
+    rows, failures = gate.check_autotune(ok)
+    assert failures == [] and all(r[4] == "OK" for r in rows)
+    # exactly at the floor passes
+    _, failures = gate.check_autotune(
+        _doc(autotune=_autotune_section(searched_vs_default=0.95)))
+    assert failures == []
+    # a searched config that measured worse than the default fails
+    _, failures = gate.check_autotune(
+        _doc(autotune=_autotune_section(searched_vs_default=0.9)))
+    assert len(failures) == 1 and "searched_vs_default" in failures[0]
+    # a search that evaluated nothing fails
+    _, failures = gate.check_autotune(
+        _doc(autotune=_autotune_section(candidates=0, admissible=0)))
+    assert len(failures) == 2
+    # missing section -> no rows; missing keys -> SKIP, not crash
+    assert gate.check_autotune(_doc()) == ([], [])
+    rows, failures = gate.check_autotune(_doc(autotune={"n": 4}))
+    assert failures == [] and all("SKIP" in r[4] for r in rows)
+
+
+def test_validate_schema_autotune_required_keys(gate):
+    assert gate.validate_schema(_doc(autotune=_autotune_section())) == []
+    sec = _autotune_section()
+    del sec["searched_vs_default"]
+    del sec["budget"]
+    problems = gate.validate_schema(_doc(autotune=sec), "fresh")
+    assert any("searched_vs_default" in p for p in problems)
+    assert any("budget" in p for p in problems)
+    # default/searched sub-objects must carry the measured tok/s the
+    # floors and the trajectory read
+    problems = gate.validate_schema(
+        _doc(autotune=_autotune_section(searched={"ttft_p50_ms": 1.0})))
+    assert any("autotune.searched" in p and "decode_tok_s" in p
+               for p in problems)
+    problems = gate.validate_schema(_doc(autotune="not a dict"))
+    assert any("not an object" in p for p in problems)
+
+
 # -------------------------------------------------------- schema validate --
 def test_validate_schema_accepts_committed_baseline(gate):
     repo = pathlib.Path(__file__).resolve().parents[1]
